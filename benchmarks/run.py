@@ -1,0 +1,216 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Wall-times are CPU-host times
+(this container has no TPU): the *relative* constant-vs-batch trends mirror
+the paper's Figs. 2-4 mechanism (less memory traffic per solve); the
+absolute roofline story for TPU lives in EXPERIMENTS.md §Roofline and the
+analytic kernel-traffic table (bench_kernel_traffic).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig2       # one table
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, reps=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6   # us
+
+
+def _rhs(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2: tridiagonal — cuThomasConstantBatch vs cuThomasBatch (N x M grid)
+# ---------------------------------------------------------------------------
+
+def bench_fig2_tridiag():
+    from repro.core import TridiagOperator
+    sigma = 0.4
+    for n in (64, 256, 1024):
+        for m in (64, 512, 4096):
+            ops = {}
+            for mode in ("constant", "batch"):
+                op = TridiagOperator.create(
+                    -sigma, 1 + 2 * sigma, -sigma, n=n, mode=mode,
+                    periodic=True, batch=m if mode == "batch" else None)
+                d = _rhs(n, m)
+                f = jax.jit(op.solve)
+                ops[mode] = _timeit(f, d)
+            speedup = ops["batch"] / ops["constant"]
+            print(f"fig2_tridiag_N{n}_M{m},{ops['constant']:.0f},"
+                  f"speedup_vs_batch={speedup:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3: pentadiagonal — cuPentConstantBatch vs cuPentBatch
+# ---------------------------------------------------------------------------
+
+def bench_fig3_penta():
+    from repro.core import PentaOperator
+    s = 0.11
+    coef = (s, -4 * s, 1 + 6 * s, -4 * s, s)
+    for n in (64, 256, 1024):
+        for m in (64, 512, 4096):
+            res = {}
+            for mode in ("constant", "batch"):
+                op = PentaOperator.create(
+                    *coef, n=n, mode=mode, periodic=True,
+                    batch=m if mode == "batch" else None)
+                d = _rhs(n, m)
+                res[mode] = _timeit(jax.jit(op.solve), d)
+            print(f"fig3_penta_N{n}_M{m},{res['constant']:.0f},"
+                  f"speedup_vs_batch={res['batch']/res['constant']:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: cuPentUniformBatch vs cuPentBatch
+# ---------------------------------------------------------------------------
+
+def bench_fig4_uniform():
+    from repro.core import PentaOperator
+    s = 0.11
+    coef = (s, -4 * s, 1 + 6 * s, -4 * s, s)
+    for n, m in ((256, 512), (1024, 512), (256, 4096)):
+        res = {}
+        for mode in ("uniform", "batch"):
+            op = PentaOperator.create(
+                *coef, n=n, mode=mode, periodic=True,
+                batch=m if mode == "batch" else None)
+            d = _rhs(n, m)
+            res[mode] = _timeit(jax.jit(op.solve), d)
+        print(f"fig4_uniform_N{n}_M{m},{res['uniform']:.0f},"
+              f"speedup_vs_batch={res['batch']/res['uniform']:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Storage table (§III.A / §IV.A claims: ~75% and ~83% reductions)
+# ---------------------------------------------------------------------------
+
+def bench_memory_table():
+    from repro.core import PentaOperator, TridiagOperator
+    n, m = 1024, 65536
+    tri_c = TridiagOperator.create(1., 4., 1., n=n, mode="constant")
+    tri_b = TridiagOperator.create(1., 4., 1., n=n, mode="batch", batch=m)
+    tc = tri_c.storage_bytes(rhs_batch=m)["total_bytes"]
+    tb = tri_b.storage_bytes(rhs_batch=m)["total_bytes"]
+    print(f"mem_tridiag_N{n}_M{m},0,reduction={100*(1-tc/tb):.1f}%_paper75%")
+    pen_c = PentaOperator.create(1., -4., 7., -4., 1., n=n, mode="constant")
+    pen_b = PentaOperator.create(1., -4., 7., -4., 1., n=n, mode="batch", batch=m)
+    pen_u = PentaOperator.create(1., -4., 7., -4., 1., n=n, mode="uniform")
+    pc = pen_c.storage_bytes(rhs_batch=m)["total_bytes"]
+    pb = pen_b.storage_bytes(rhs_batch=m)["total_bytes"]
+    pu = pen_u.storage_bytes(rhs_batch=m)["total_bytes"]
+    print(f"mem_penta_N{n}_M{m},0,reduction={100*(1-pc/pb):.1f}%_paper83%")
+    print(f"mem_penta_uniform_N{n}_M{m},0,reduction={100*(1-pu/pb):.1f}%")
+
+
+# ---------------------------------------------------------------------------
+# Kernel HBM-traffic table (the TPU roofline story for the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+def bench_kernel_traffic():
+    from repro.kernels.fused_cn import hbm_traffic_bytes as fused_t
+    from repro.kernels.fused_cn_penta import hbm_traffic_bytes as fusedp_t
+    from repro.kernels.penta import hbm_traffic_bytes as pen_t
+    from repro.kernels.thomas import hbm_traffic_bytes as tri_t
+    n, m = 1024, 65536
+    t = tri_t(n, m)
+    print(f"traffic_tridiag_N{n}_M{m},0,batch/constant="
+          f"{t['batch']/t['constant']:.2f}x")
+    p = pen_t(n, m)
+    print(f"traffic_penta_N{n}_M{m},0,batch/constant="
+          f"{p['batch']/p['constant']:.2f}x")
+    fz = fused_t(n, m)
+    print(f"traffic_fused_cn_N{n}_M{m},0,unfused/fused="
+          f"{fz['unfused_pipeline']/fz['fused']:.2f}x")
+    fp = fusedp_t(n, m)
+    print(f"traffic_fused_cn_penta_N{n}_M{m},0,unfused/fused="
+          f"{fp['unfused_pipeline']/fp['fused']:.2f}x")
+    # memory-roofline seconds per CN step on v5e (819 GB/s)
+    for name, b in [("constant_pipeline", fz["unfused_pipeline"]),
+                    ("fused", fz["fused"]),
+                    ("penta_fused", fp["fused"])]:
+        print(f"roofline_cn_step_{name},{b/819e9*1e6:.1f},hbm_bound_us")
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret mode) vs pure-jnp reference — correctness + time
+# ---------------------------------------------------------------------------
+
+def bench_pallas_kernels():
+    from repro.core import thomas_factor
+    from repro.kernels import thomas_constant
+    n, m = 256, 1024
+    rng = np.random.default_rng(0)
+    a = rng.uniform(-1, 1, n).astype(np.float32)
+    c = rng.uniform(-1, 1, n).astype(np.float32)
+    b = (np.abs(a) + np.abs(c) + 2.5).astype(np.float32)
+    f = thomas_factor(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    d = _rhs(n, m)
+    t = _timeit(lambda dd: thomas_constant(f, dd), d, reps=2)
+    print(f"pallas_thomas_constant_interp_N{n}_M{m},{t:.0f},interpret_mode")
+
+
+# ---------------------------------------------------------------------------
+# Dry-run roofline summary (reads artifacts if present)
+# ---------------------------------------------------------------------------
+
+def bench_dryrun_summary():
+    import glob
+    import json
+    import os
+    rows = []
+    for p in sorted(glob.glob("artifacts/dryrun/*.json")):
+        if "__pod2" in p or "__" not in os.path.basename(p):
+            continue
+        d = json.load(open(p))
+        if d.get("status") != "ok":
+            continue
+        rl = d["roofline"]
+        rows.append((d["arch"], d["shape"], rl["dominant"],
+                     rl["bound_s"], d.get("roofline_fraction", 0)))
+    if not rows:
+        print("dryrun_summary,0,no_artifacts_run_python_-m_repro.launch.dryrun_--all")
+        return
+    for arch, shape, dom, bound, frac in rows:
+        print(f"dryrun_{arch}_{shape},{bound*1e6:.0f},"
+              f"dominant={dom}_rooflinefrac={frac:.3f}")
+
+
+TABLES = {
+    "fig2": bench_fig2_tridiag,
+    "fig3": bench_fig3_penta,
+    "fig4": bench_fig4_uniform,
+    "memory": bench_memory_table,
+    "traffic": bench_kernel_traffic,
+    "pallas": bench_pallas_kernels,
+    "dryrun": bench_dryrun_summary,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    for k in which:
+        TABLES[k]()
+
+
+if __name__ == "__main__":
+    main()

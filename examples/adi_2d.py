@@ -1,0 +1,37 @@
+"""2-D ADI heat equation (the paper's §I motivating application): each ADI
+half-step is a batch of 1-D periodic tridiagonal solves sharing one LHS.
+
+    PYTHONPATH=src python examples/adi_2d.py
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.pde import ADI2D
+
+NX = NY = 128
+steps = 200
+dt = 5e-6
+
+model = ADI2D(nx=NX, ny=NY, dt=dt)
+x = (np.arange(NX) / NX)[:, None]
+y = (np.arange(NY) / NY)[None, :]
+f0 = jnp.asarray((np.sin(2 * np.pi * x) * np.sin(2 * np.pi * y))
+                 .astype(np.float32))
+
+run = jax.jit(lambda f: model.run(f, steps))
+jax.block_until_ready(run(f0))
+t0 = time.time()
+out = np.asarray(jax.block_until_ready(run(f0)))
+wall = time.time() - t0
+
+want = model.analytic(x, y, dt * steps).astype(np.float32)
+err = np.max(np.abs(out - want))
+print(f"ADI 2D: {NX}x{NY}, {steps} steps in {wall:.2f}s "
+      f"({steps/wall:.1f} steps/s)")
+print(f"max err vs analytic: {err:.2e}")
+assert err < 5e-3
+print("OK")

@@ -1,0 +1,63 @@
+"""Quickstart: the paper's contribution in 40 lines.
+
+Solve 10,000 periodic tridiagonal systems that share one LHS (the batch-1D-
+PDE setting), compare the constant-LHS storage/solve against the per-system
+baseline (cuThomasBatch-equivalent), and run the same thing through the
+Pallas TPU kernel (interpret mode on CPU).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import TridiagOperator, PentaOperator
+from repro.core import periodic_thomas_factor
+from repro.kernels import thomas_constant
+
+N, M = 512, 10_000
+sigma = 0.4
+
+# --- the paper's setting: one LHS (CN diffusion matrix), M interleaved RHS --
+rng = np.random.default_rng(0)
+rhs = jnp.asarray(rng.normal(size=(N, M)).astype(np.float32))
+
+const_op = TridiagOperator.create(-sigma, 1 + 2 * sigma, -sigma, n=N,
+                                  mode="constant", periodic=True)
+batch_op = TridiagOperator.create(-sigma, 1 + 2 * sigma, -sigma, n=N,
+                                  mode="batch", periodic=True, batch=M)
+
+x_const = const_op.solve(rhs)
+x_batch = batch_op.solve(rhs)
+print("constant vs per-system max |dx|:",
+      float(jnp.max(jnp.abs(x_const - x_batch))))
+
+sc = const_op.storage_bytes(rhs_batch=M)
+sb = batch_op.storage_bytes(rhs_batch=M)
+print(f"LHS storage:  constant {sc['lhs_bytes']/2**10:.1f} KiB   "
+      f"batch {sb['lhs_bytes']/2**20:.1f} MiB")
+print(f"total (LHS+RHS): {sc['total_bytes']/2**20:.1f} MiB vs "
+      f"{sb['total_bytes']/2**20:.1f} MiB  "
+      f"-> {100*(1-sc['total_bytes']/sb['total_bytes']):.1f}% saved "
+      f"(paper: ~75%)")
+
+# --- pentadiagonal (hyperdiffusion LHS), incl. the uniform variant ----------
+pen_c = PentaOperator.create(sigma, -4*sigma, 1+6*sigma, -4*sigma, sigma,
+                             n=N, mode="constant", periodic=True)
+pen_b = PentaOperator.create(sigma, -4*sigma, 1+6*sigma, -4*sigma, sigma,
+                             n=N, mode="batch", periodic=True, batch=M)
+pc = pen_c.storage_bytes(rhs_batch=M)["total_bytes"]
+pb = pen_b.storage_bytes(rhs_batch=M)["total_bytes"]
+print(f"penta total: {pc/2**20:.1f} MiB vs {pb/2**20:.1f} MiB "
+      f"-> {100*(1-pc/pb):.1f}% saved (paper: ~83%)")
+
+# --- the Pallas TPU kernel (interpret=True on CPU) ---------------------------
+pf = periodic_thomas_factor(jnp.full((N,), -sigma),
+                            jnp.full((N,), 1 + 2 * sigma),
+                            jnp.full((N,), -sigma))
+y = thomas_constant(pf.factor, rhs[:, :256])
+corr = (y[0] + pf.v_last * y[-1]) * pf.inv_denom_sm
+x_kernel = y - corr * pf.z[:, None]
+print("Pallas kernel vs core max |dx|:",
+      float(jnp.max(jnp.abs(x_kernel - x_const[:, :256]))))
+print("OK")

@@ -1,0 +1,15 @@
+"""Serving example: batched prefill + decode with continuous-batching-lite
+(thin wrapper over repro.launch.serve).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "granite-3-8b", "--smoke",
+                "--requests", "12", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"]
+    serve_mod.main()

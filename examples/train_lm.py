@@ -1,0 +1,23 @@
+"""End-to-end driver: train the ~130M-param mamba2-130m config for a few
+hundred steps on the synthetic stream, with checkpoint/auto-resume and the
+fault-tolerance runtime (thin wrapper over repro.launch.train).
+
+    PYTHONPATH=src python examples/train_lm.py            # full ~130M run
+    PYTHONPATH=src python examples/train_lm.py --quick    # CI-sized
+"""
+
+import sys
+
+from repro.launch import train as train_mod
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv:
+        sys.argv = [sys.argv[0], "--arch", "mamba2-130m", "--smoke",
+                    "--steps", "40", "--batch", "4", "--seq", "64",
+                    "--ckpt-dir", "artifacts/train_quick"]
+    else:
+        sys.argv = [sys.argv[0], "--arch", "mamba2-130m",
+                    "--steps", "200", "--batch", "2", "--seq", "128",
+                    "--ckpt-dir", "artifacts/train_130m",
+                    "--ckpt-every", "25", "--log-every", "5"]
+    train_mod.main()

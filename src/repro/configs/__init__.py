@@ -1,0 +1,97 @@
+"""Architecture registry + the assigned input-shape grid.
+
+Every entry reproduces a published config (source tags in each file). The
+four shape cells per arch are the assigned grid; ``long_500k`` runs only for
+sub-quadratic archs (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ArchConfig, build_model, reduced
+
+ARCH_IDS = [
+    "llama_3_2_vision_90b",
+    "mistral_large_123b",
+    "minitron_4b",
+    "granite_3_8b",
+    "granite_34b",
+    "recurrentgemma_9b",
+    "dbrx_132b",
+    "kimi_k2_1t_a32b",
+    "mamba2_130m",
+    "seamless_m4t_large_v2",
+]
+
+def _norm(name: str) -> str:
+    """External ids use dashes/dots (llama-3.2-vision-90b); modules use
+    underscores."""
+    return name.replace("-", "_").replace(".", "_")
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return reduced(get_config(name))
+
+
+def shape_applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic():
+        return False, ("full quadratic attention at 524k tokens — skipped per "
+                       "brief; runs only for SSM/hybrid archs")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train  -> kwargs for train_step(batch=...)
+    prefill-> kwargs for prefill_step(batch=...)
+    decode -> kwargs for decode_step(cache=..., token=..., pos=...)
+    """
+    seq, batch, kind = SHAPES[shape_name]
+    i32 = jnp.int32
+    tok = jax.ShapeDtypeStruct((batch, seq), i32)
+
+    def frontends():
+        extra = {}
+        if cfg.family == "vlm":
+            extra["img_embed"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_img_tokens, cfg.vision_dim), jnp.bfloat16)
+        if cfg.family == "encdec":
+            extra["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+        return extra
+
+    if kind == "train":
+        return {"batch": {"tokens": tok, "labels": tok, **frontends()}}
+    if kind == "prefill":
+        return {"batch": {"tokens": tok, **frontends()}}
+    if kind == "decode":
+        model = build_model(cfg)
+        cache = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+            model.cache_specs(batch, seq),
+            is_leaf=lambda s: hasattr(s, "names"))
+        return {
+            "cache": cache,
+            "token": jax.ShapeDtypeStruct((batch,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape_name)

@@ -1,0 +1,39 @@
+"""Paper core: constant-LHS interleaved batch banded solvers (pure JAX).
+
+Gloster, Carroll, Bustamante, Ó Náraigh — "Efficient Interleaved Batch Matrix
+Solvers for CUDA" (2019). See DESIGN.md for the CUDA→TPU adaptation.
+"""
+
+from .banded import PentaOperator, TridiagOperator
+from .penta import (
+    PentaFactor,
+    PeriodicPentaFactor,
+    dense_penta,
+    penta_factor,
+    penta_factor_solve,
+    penta_solve,
+    periodic_penta_factor,
+    periodic_penta_solve,
+)
+from .recurrence import linear_recurrence, linear_recurrence2
+from .tridiag import (
+    PeriodicTridiagFactor,
+    TridiagFactor,
+    dense_tridiag,
+    periodic_thomas_factor,
+    periodic_thomas_solve,
+    thomas_factor,
+    thomas_factor_solve,
+    thomas_solve,
+)
+
+__all__ = [
+    "PentaFactor", "PentaOperator", "PeriodicPentaFactor",
+    "PeriodicTridiagFactor", "TridiagFactor", "TridiagOperator",
+    "dense_penta", "dense_tridiag",
+    "linear_recurrence", "linear_recurrence2",
+    "penta_factor", "penta_factor_solve", "penta_solve",
+    "periodic_penta_factor", "periodic_penta_solve",
+    "periodic_thomas_factor", "periodic_thomas_solve",
+    "thomas_factor", "thomas_factor_solve", "thomas_solve",
+]

@@ -1,0 +1,164 @@
+"""First-order / second-order linear recurrence engine.
+
+This is the computational primitive shared by:
+  * the Thomas tridiagonal sweeps   (h_i = p_i h_{i-1} + q_i),
+  * the pentadiagonal LR sweeps     (h_i = s_i h_{i-1} + t_i h_{i-2} + u_i),
+  * the SSM layers (Mamba-2 SSD inter-chunk state scan, RG-LRU) in
+    ``repro.models`` — the paper's "single shared LHS, many interleaved RHS"
+    pattern shows up here as shared (N,)-shaped coefficients broadcast across a
+    batch of (N, M)-shaped operands.
+
+Two execution strategies:
+  * ``method="scan"``  — sequential ``lax.scan`` (work-optimal, O(N) depth).
+  * ``method="assoc"`` — ``lax.associative_scan`` (O(log N) depth, ~2x work),
+    the TPU analogue of parallel cyclic reduction for long N.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _align(coef: jax.Array, ref: jax.Array) -> jax.Array:
+    """Right-pad ``coef`` with singleton dims so it broadcasts against ``ref``.
+
+    ``coef`` has shape (N,) (shared coefficients — the paper's constant-LHS
+    case) or ``ref.shape`` (per-system coefficients — the baseline case).
+    """
+    coef = jnp.asarray(coef)
+    if coef.ndim == ref.ndim:
+        return coef
+    if coef.ndim != 1:
+        raise ValueError(f"coefficient rank {coef.ndim} vs operand rank {ref.ndim}")
+    return coef.reshape(coef.shape + (1,) * (ref.ndim - 1))
+
+
+def linear_recurrence(
+    p: jax.Array,
+    q: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    reverse: bool = False,
+    method: str = "scan",
+    unroll: int = 1,
+) -> jax.Array:
+    """Solve h_i = p_i * h_{i-1} + q_i for i = 0..N-1 (h_{-1} = h0, default 0).
+
+    p: (N,) or (N, ...) — multiplicative coefficients (shared or per-system).
+    q: (N, ...)         — additive operands (e.g. interleaved RHS batch (N, M)).
+    reverse: run the recurrence from i = N-1 down to 0 (h_i depends on h_{i+1}).
+    Returns h with q's shape.
+    """
+    q = jnp.asarray(q)
+    p = _align(p, q)
+
+    if method == "scan":
+        def step(h, pq):
+            p_i, q_i = pq
+            h_new = p_i * h + q_i
+            return h_new, h_new
+
+        init = jnp.zeros_like(q[0]) if h0 is None else jnp.broadcast_to(h0, q[0].shape).astype(q.dtype)
+        _, h = jax.lax.scan(step, init, (p, q), reverse=reverse, unroll=unroll)
+        return h
+
+    if method == "assoc":
+        def combine(fst, snd):
+            # fst happened earlier in scan order; composition:
+            # h -> p2*(p1*h + q1) + q2 = (p1*p2)*h + (p2*q1 + q2)
+            p1, q1 = fst
+            p2, q2 = snd
+            return p1 * p2, p2 * q1 + q2
+
+        pp, qq = jax.lax.associative_scan(combine, (p, q), reverse=reverse, axis=0)
+        if h0 is not None:
+            return pp * jnp.broadcast_to(h0, q[0].shape).astype(q.dtype) + qq
+        return qq
+
+    raise ValueError(f"unknown method {method!r}")
+
+
+def linear_recurrence2(
+    s: jax.Array,
+    t: jax.Array,
+    u: jax.Array,
+    *,
+    reverse: bool = False,
+    method: str = "scan",
+    unroll: int = 1,
+) -> jax.Array:
+    """Solve h_i = s_i h_{i-1} + t_i h_{i-2} + u_i  (h_{-1} = h_{-2} = 0).
+
+    With ``reverse=True`` solves h_i = s_i h_{i+1} + t_i h_{i+2} + u_i
+    (h_N = h_{N+1} = 0) — the pentadiagonal back-substitution shape.
+
+    s, t: (N,) or (N, ...);  u: (N, ...).
+    """
+    u = jnp.asarray(u)
+    s = _align(s, u)
+    t = _align(t, u)
+
+    if method == "scan":
+        def step(carry, stu):
+            h1, h2 = carry  # h_{i-1}, h_{i-2}
+            s_i, t_i, u_i = stu
+            h_new = s_i * h1 + t_i * h2 + u_i
+            return (h_new, h1), h_new
+
+        init = (jnp.zeros_like(u[0]), jnp.zeros_like(u[0]))
+        _, h = jax.lax.scan(step, init, (s, t, u), reverse=reverse, unroll=unroll)
+        return h
+
+    if method == "assoc":
+        # 2x2 companion-matrix associative scan:
+        #   H_i = [[s_i, t_i], [1, 0]] H_{i-1} + [u_i, 0],  H = (h_i, h_{i-1}).
+        one = jnp.ones_like(s)
+        zero = jnp.zeros_like(s)
+        # A: (N, 2, 2, ...), b: (N, 2, ...) — move the 2x2 in axes 1,2.
+        A = jnp.stack(
+            [jnp.stack([s, t], axis=1), jnp.stack([one, zero], axis=1)], axis=1
+        )  # (N, 2, 2, ...)
+        b = jnp.stack([u, jnp.zeros_like(u)], axis=1)  # (N, 2, ...)
+
+        def matmul2(X, Y):
+            # X, Y: (k, 2, 2, ...) — contract the inner 2-dims explicitly.
+            return jnp.stack(
+                [
+                    jnp.stack(
+                        [
+                            X[:, 0, 0] * Y[:, 0, 0] + X[:, 0, 1] * Y[:, 1, 0],
+                            X[:, 0, 0] * Y[:, 0, 1] + X[:, 0, 1] * Y[:, 1, 1],
+                        ],
+                        axis=1,
+                    ),
+                    jnp.stack(
+                        [
+                            X[:, 1, 0] * Y[:, 0, 0] + X[:, 1, 1] * Y[:, 1, 0],
+                            X[:, 1, 0] * Y[:, 0, 1] + X[:, 1, 1] * Y[:, 1, 1],
+                        ],
+                        axis=1,
+                    ),
+                ],
+                axis=1,
+            )
+
+        def matvec2(X, v):
+            # X: (k, 2, 2, ...), v: (k, 2, ...)
+            return jnp.stack(
+                [
+                    X[:, 0, 0] * v[:, 0] + X[:, 0, 1] * v[:, 1],
+                    X[:, 1, 0] * v[:, 0] + X[:, 1, 1] * v[:, 1],
+                ],
+                axis=1,
+            )
+
+        def combine(fst, snd):
+            A1, b1 = fst
+            A2, b2 = snd
+            return matmul2(A2, A1), matvec2(A2, b1) + b2
+
+        _, bb = jax.lax.associative_scan(combine, (A, b), reverse=reverse, axis=0)
+        return bb[:, 0]
+
+    raise ValueError(f"unknown method {method!r}")

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the paper's batched banded solvers.
+
+Validated in ``interpret=True`` mode on CPU (this container); compiled for
+TPU in production. See DESIGN.md §2 for the CUDA→TPU layout mapping.
+"""
+
+from .ops import (
+    fused_cn_penta_step,
+    fused_cn_step,
+    penta_batch,
+    penta_constant,
+    sharded_solve,
+    stack_penta_lhs,
+    stack_tridiag_lhs,
+    thomas_batch,
+    thomas_constant,
+)
+
+__all__ = [
+    "fused_cn_penta_step", "fused_cn_step", "penta_batch", "penta_constant",
+    "sharded_solve", "stack_penta_lhs", "stack_tridiag_lhs", "thomas_batch",
+    "thomas_constant",
+]

@@ -1,0 +1,63 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels in this package follow the paper's interleaved layout adapted to
+TPU (DESIGN.md §2): the batch/system index M rides the 128-wide lane axis,
+the unknown index N is the sequential sweep axis, and the shared LHS lives in
+a single VMEM-resident block whose index_map is constant across the grid —
+the TPU analogue of every CUDA warp broadcast-hitting one global LHS copy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM is ~16 MiB/core on recent TPUs; leave headroom for double buffering.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # conservative per-kernel working set
+LANE = 128          # TPU lane width — one system per lane (paper: one per thread)
+SUBLANE = 8         # VREG sublane depth — sweep unroll granularity
+
+
+def default_interpret() -> bool:
+    """Pallas kernels target TPU; on CPU containers validate via interpret."""
+    return jax.default_backend() != "tpu"
+
+
+def row(ref, i, width):
+    """Load row i (dynamic) of a 2-D ref -> (width,) vector."""
+    return ref[pl.ds(i, 1), :].reshape((width,))
+
+
+def store_row(ref, i, val):
+    ref[pl.ds(i, 1), :] = val.reshape((1,) + val.shape)
+
+
+def scalar(ref, r, i):
+    """Load element [r, i] (r static, i dynamic) of a 2-D ref -> scalar."""
+    return ref[r:r + 1, pl.ds(i, 1)].reshape(())
+
+
+def pad_lanes(x: jax.Array, block_m: int) -> tuple[jax.Array, int]:
+    """Pad the minor (system) axis of an interleaved (N, M) batch to a
+    multiple of the lane tile. Returns (padded, original_M)."""
+    m = x.shape[-1]
+    rem = (-m) % block_m
+    if rem:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, rem)])
+    return x, m
+
+
+def vmem_working_set(n: int, block_m: int, n_rhs_blocks: int, n_lhs_vecs: int,
+                     itemsize: int = 4) -> int:
+    """Bytes of VMEM a solver grid step holds: RHS/out blocks + shared LHS."""
+    return (n_rhs_blocks * n * block_m + n_lhs_vecs * n) * itemsize
+
+
+def check_vmem(n: int, block_m: int, n_rhs_blocks: int, n_lhs_vecs: int) -> None:
+    ws = vmem_working_set(n, block_m, n_rhs_blocks, n_lhs_vecs)
+    if ws > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"solver working set {ws/2**20:.1f} MiB exceeds VMEM budget "
+            f"({VMEM_BUDGET_BYTES/2**20:.0f} MiB): N={n}, BLOCK_M={block_m}. "
+            f"Reduce block_m or split N (HBM-streamed variant).")

@@ -1,0 +1,162 @@
+"""Public jit'd entry points for the solver kernels.
+
+These wrap the raw ``pallas_call`` kernels with:
+  * factored-LHS stacking from ``repro.core`` factor types,
+  * lane padding (the batch axis is padded to the lane-tile multiple),
+  * automatic ``interpret=True`` off-TPU (validation mode on CPU),
+  * VMEM-budget checks,
+  * an optional ``shard_map`` distribution over the system/batch axis — the
+    paper's single-LHS idea at cluster scale: ONE LHS copy per device
+    (replicated), RHS systems sharded across the mesh, zero collectives in
+    the solve (embarrassingly parallel over M).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import (PentaFactor, PeriodicPentaFactor,
+                        PeriodicTridiagFactor, TridiagFactor)
+from .common import check_vmem, default_interpret, pad_lanes
+from .fused_cn import fused_cn_tridiag_pallas
+from .fused_cn_penta import fused_cn_penta_pallas
+from .penta import penta_batch_pallas, penta_constant_pallas
+from .thomas import thomas_batch_pallas, thomas_constant_pallas
+
+
+def stack_tridiag_lhs(f: TridiagFactor) -> jax.Array:
+    return jnp.stack([f.a, f.inv_denom, f.c_hat])
+
+
+def stack_penta_lhs(f: PentaFactor, uniform: bool = False) -> jax.Array:
+    if uniform:
+        return jnp.stack([f.beta, f.inv_alpha, f.gamma, f.delta])
+    eps = jnp.broadcast_to(f.eps, f.beta.shape)
+    return jnp.stack([eps, f.beta, f.inv_alpha, f.gamma, f.delta])
+
+
+def thomas_constant(f: TridiagFactor, d: jax.Array, *, block_m: int = 128,
+                    unroll: int = 1, interpret: bool | None = None) -> jax.Array:
+    """Constant-LHS batched Thomas solve (cuThomasConstantBatch). d: (N, M)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = d.shape[0]
+    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=3)
+    d_pad, m = pad_lanes(d, block_m)
+    x = thomas_constant_pallas(stack_tridiag_lhs(f), d_pad, block_m=block_m,
+                               unroll=unroll, interpret=interpret)
+    return x[:, :m]
+
+
+def thomas_batch(a, b, c, d, *, block_m: int = 128, unroll: int = 1,
+                 interpret: bool | None = None) -> jax.Array:
+    """Per-system-LHS baseline (cuThomasBatch). a/b/c/d: (N, M)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = d.shape[0]
+    check_vmem(n, block_m, n_rhs_blocks=6, n_lhs_vecs=0)  # 3 diag + rhs + out + scratch
+    m = d.shape[1]
+    args = [pad_lanes(x, block_m)[0] for x in (a, b, c, d)]
+    x = thomas_batch_pallas(*args, block_m=block_m, unroll=unroll,
+                            interpret=interpret)
+    return x[:, :m]
+
+
+def penta_constant(f: PentaFactor, rhs: jax.Array, *, block_m: int = 128,
+                   unroll: int = 1, interpret: bool | None = None,
+                   uniform: bool = False) -> jax.Array:
+    """Constant-LHS batched penta solve (cuPentConstantBatch /
+    cuPentUniformBatch when ``uniform``)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = rhs.shape[0]
+    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=5)
+    rhs_pad, m = pad_lanes(rhs, block_m)
+    ueps = float(f.eps[2]) if uniform else None
+    x = penta_constant_pallas(stack_penta_lhs(f, uniform=uniform), rhs_pad,
+                              block_m=block_m, unroll=unroll,
+                              interpret=interpret, uniform_eps=ueps)
+    return x[:, :m]
+
+
+def penta_batch(a, b, c, d, e, rhs, *, block_m: int = 128, unroll: int = 1,
+                interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
+    n = rhs.shape[0]
+    check_vmem(n, block_m, n_rhs_blocks=9, n_lhs_vecs=0)
+    m = rhs.shape[1]
+    args = [pad_lanes(x, block_m)[0] for x in (a, b, c, d, e, rhs)]
+    x = penta_batch_pallas(*args, block_m=block_m, unroll=unroll,
+                           interpret=interpret)
+    return x[:, :m]
+
+
+def fused_cn_step(pf: PeriodicTridiagFactor, sigma: float, c: jax.Array, *,
+                  block_m: int = 128, unroll: int = 1,
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused periodic CN diffusion step (beyond-paper; see fused_cn.py)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = c.shape[0]
+    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=4)
+    lhs = stack_tridiag_lhs(pf.factor)
+    z = pf.z.reshape(n, 1)
+    params = jnp.zeros((1, 8), c.dtype)
+    params = params.at[0, 0].set(sigma).at[0, 1].set(1 - 2 * sigma) \
+                   .at[0, 2].set(sigma).at[0, 3].set(pf.v_last) \
+                   .at[0, 4].set(pf.inv_denom_sm)
+    c_pad, m = pad_lanes(c, block_m)
+    x = fused_cn_tridiag_pallas(lhs, z, params, c_pad, block_m=block_m,
+                                unroll=unroll, interpret=interpret)
+    return x[:, :m]
+
+
+def fused_cn_penta_step(pf: PeriodicPentaFactor, sigma: float, c: jax.Array,
+                        *, block_m: int = 128, unroll: int = 1,
+                        interpret: bool | None = None) -> jax.Array:
+    """Fused periodic CN hyperdiffusion step (beyond-paper #2;
+    see fused_cn_penta.py). c: (N, M) -> (N, M)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = c.shape[0]
+    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=10)
+    lhs = stack_penta_lhs(pf.factor)
+    params = jnp.zeros((1, 16), c.dtype)
+    stencil = [-sigma, 4 * sigma, 1 - 6 * sigma, 4 * sigma, -sigma]
+    for i, v in enumerate(stencil):
+        params = params.at[0, i].set(v)
+    for i in range(6):
+        params = params.at[0, 5 + i].set(pf.vcoef[i])
+    c_pad, m = pad_lanes(c, block_m)
+    x = fused_cn_penta_pallas(lhs, pf.Z, pf.Minv, params, c_pad,
+                              block_m=block_m, unroll=unroll,
+                              interpret=interpret)
+    return x[:, :m]
+
+
+# ---------------------------------------------------------------------------
+# Distributed batch solving: one LHS copy per DEVICE, systems sharded.
+# ---------------------------------------------------------------------------
+
+def sharded_solve(solve_fn, mesh: Mesh, batch_axes) -> callable:
+    """Wrap a (factor, rhs (N, M)) -> x solver so the M axis is sharded over
+    ``batch_axes`` of ``mesh`` and the factored LHS is replicated (the
+    paper's storage saving, applied per-device). The solve needs no
+    collectives — systems are independent.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    spec_rhs = P(None, batch_axes)
+    fn = shard_map(solve_fn, mesh=mesh,
+                   in_specs=(P(), spec_rhs), out_specs=spec_rhs,
+                   check_rep=False)
+
+    def wrapped(factor, rhs):
+        return fn(factor, rhs)
+
+    return wrapped

@@ -1,0 +1,181 @@
+"""Pallas TPU kernels: batched pentadiagonal LR solves (paper §IV).
+
+cuPentConstantBatch -> ``penta_constant_kernel``: shared (5, N) factored LHS
+[eps, beta, inv_alpha, gamma, delta] in one VMEM-resident block; interleaved
+(N, BLOCK_M) RHS, one system per lane.
+
+cuPentBatch (baseline) -> ``penta_batch_kernel``: five (N, BLOCK_M) per-lane
+diagonal blocks, factorisation fused into every solve.
+
+cuPentUniformBatch -> constant kernel with a (4, N) LHS: eps is a scalar
+compiled into the kernel (all diagonal entries equal — paper §IV.C), saving
+the eps vector fetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import row, scalar, store_row
+
+# row indices in the stacked constant LHS
+EPS, BETA, INV_ALPHA, GAMMA, DELTA = range(5)
+
+
+def penta_constant_kernel(lhs_ref, f_ref, x_ref, *, n: int, unroll: int,
+                          uniform_eps: float | None = None):
+    """lhs_ref: (5, N) ([4, N] when uniform); f_ref/x_ref: (N, BLOCK_M)."""
+    m = f_ref.shape[1]
+    off = 0 if uniform_eps is None else -1  # uniform LHS drops the eps row
+
+    def eps_at(i):
+        if uniform_eps is not None:
+            return uniform_eps
+        return scalar(lhs_ref, EPS, i)
+
+    # --- forward:  g_i = (f_i - eps_i g_{i-2} - beta_i g_{i-1}) inv_alpha_i
+    g0 = row(f_ref, 0, m) * scalar(lhs_ref, INV_ALPHA + off, 0)
+    store_row(x_ref, 0, g0)
+    g1 = (row(f_ref, 1, m) - scalar(lhs_ref, BETA + off, 1) * g0) \
+        * scalar(lhs_ref, INV_ALPHA + off, 1)
+    store_row(x_ref, 1, g1)
+
+    def fwd(i, carry):
+        gm1, gm2 = carry
+        g = (row(f_ref, i, m) - eps_at(i) * gm2
+             - scalar(lhs_ref, BETA + off, i) * gm1) \
+            * scalar(lhs_ref, INV_ALPHA + off, i)
+        store_row(x_ref, i, g)
+        return g, gm1
+
+    gN1, gN2 = jax.lax.fori_loop(2, n, fwd, (g1, g0), unroll=unroll)
+
+    # --- backward: x_i = g_i - gamma_i x_{i+1} - delta_i x_{i+2}
+    x_last = gN1                           # x_{N-1} = g_{N-1}
+    x_prev = gN2 - scalar(lhs_ref, GAMMA + off, n - 2) * x_last
+    store_row(x_ref, n - 2, x_prev)
+
+    def bwd(k, carry):
+        xp1, xp2 = carry
+        i = n - 3 - k
+        x_i = (row(x_ref, i, m)
+               - scalar(lhs_ref, GAMMA + off, i) * xp1
+               - scalar(lhs_ref, DELTA + off, i) * xp2)
+        store_row(x_ref, i, x_i)
+        return x_i, xp1
+
+    jax.lax.fori_loop(0, n - 2, bwd, (x_prev, x_last), unroll=unroll)
+
+
+def penta_batch_kernel(a_ref, b_ref, c_ref, d_ref, e_ref, f_ref, x_ref,
+                       gam_ref, del_ref, *, n: int, unroll: int):
+    """Per-system LHS baseline with fused factorisation (cuPentBatch)."""
+    m = f_ref.shape[1]
+    zero = jnp.zeros((m,), f_ref.dtype)
+
+    # factorisation + forward sweep interleaved (single pass over rows)
+    # carries: gamma_{i-1}, gamma_{i-2}, delta_{i-1}, delta_{i-2}, g_{i-1}, g_{i-2}
+    def body(i, carry):
+        g1, g2, dl1, dl2, gg1, gg2 = carry
+        a_i = row(a_ref, i, m)
+        beta_i = row(b_ref, i, m) - a_i * g2
+        alpha_i = row(c_ref, i, m) - a_i * dl2 - beta_i * g1
+        inv = 1.0 / alpha_i
+        gamma_i = (row(d_ref, i, m) - beta_i * dl1) * inv
+        delta_i = row(e_ref, i, m) * inv
+        store_row(gam_ref, i, gamma_i)
+        store_row(del_ref, i, delta_i)
+        g_i = (row(f_ref, i, m) - a_i * gg2 - beta_i * gg1) * inv
+        store_row(x_ref, i, g_i)
+        return gamma_i, g1, delta_i, dl1, g_i, gg1
+
+    # i = 0 (a_0 = b_0 = 0 outside matrix)
+    inv0 = 1.0 / row(c_ref, 0, m)
+    gamma0 = row(d_ref, 0, m) * inv0
+    delta0 = row(e_ref, 0, m) * inv0
+    store_row(gam_ref, 0, gamma0)
+    store_row(del_ref, 0, delta0)
+    g0 = row(f_ref, 0, m) * inv0
+    store_row(x_ref, 0, g0)
+    # i = 1 (a_1 = 0)
+    beta1 = row(b_ref, 1, m)
+    inv1 = 1.0 / (row(c_ref, 1, m) - beta1 * gamma0)
+    gamma1 = (row(d_ref, 1, m) - beta1 * delta0) * inv1
+    delta1 = row(e_ref, 1, m) * inv1
+    store_row(gam_ref, 1, gamma1)
+    store_row(del_ref, 1, delta1)
+    g1 = (row(f_ref, 1, m) - beta1 * g0) * inv1
+    store_row(x_ref, 1, g1)
+
+    carry = (gamma1, gamma0, delta1, delta0, g1, g0)
+    _, _, _, _, gN1, gN2 = jax.lax.fori_loop(2, n, body, carry, unroll=unroll)
+
+    # backward
+    x_last = gN1
+    x_prev = gN2 - row(gam_ref, n - 2, m) * x_last
+    store_row(x_ref, n - 2, x_prev)
+
+    def bwd(k, carry):
+        xp1, xp2 = carry
+        i = n - 3 - k
+        x_i = (row(x_ref, i, m) - row(gam_ref, i, m) * xp1
+               - row(del_ref, i, m) * xp2)
+        store_row(x_ref, i, x_i)
+        return x_i, xp1
+
+    jax.lax.fori_loop(0, n - 2, bwd, (x_prev, x_last), unroll=unroll)
+
+
+def _col_spec(n, block_m):
+    return pl.BlockSpec((n, block_m), lambda j: (0, j))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "unroll", "interpret", "uniform_eps"))
+def penta_constant_pallas(lhs: jax.Array, f: jax.Array, *, block_m: int = 128,
+                          unroll: int = 1, interpret: bool = True,
+                          uniform_eps: float | None = None) -> jax.Array:
+    """lhs: (5, N) [eps, beta, inv_alpha, gamma, delta] ((4, N) when
+    ``uniform_eps`` is given — the cuPentUniformBatch variant); f: (N, M)."""
+    n, m = f.shape
+    rows = 4 if uniform_eps is not None else 5
+    return pl.pallas_call(
+        functools.partial(penta_constant_kernel, n=n, unroll=unroll,
+                          uniform_eps=uniform_eps),
+        grid=(m // block_m,),
+        in_specs=[pl.BlockSpec((rows, n), lambda j: (0, 0)),
+                  _col_spec(n, block_m)],
+        out_specs=_col_spec(n, block_m),
+        out_shape=jax.ShapeDtypeStruct((n, m), f.dtype),
+        interpret=interpret,
+    )(lhs, f)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "unroll", "interpret"))
+def penta_batch_pallas(a, b, c, d, e, f, *, block_m: int = 128,
+                       unroll: int = 1, interpret: bool = True) -> jax.Array:
+    n, m = f.shape
+    spec = _col_spec(n, block_m)
+    return pl.pallas_call(
+        functools.partial(penta_batch_kernel, n=n, unroll=unroll),
+        grid=(m // block_m,),
+        in_specs=[spec] * 6,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), f.dtype),
+        scratch_shapes=[pltpu.VMEM((n, block_m), f.dtype),
+                        pltpu.VMEM((n, block_m), f.dtype)],
+        interpret=interpret,
+    )(a, b, c, d, e, f)
+
+
+def hbm_traffic_bytes(n: int, m: int, itemsize: int = 4) -> dict:
+    return {
+        "constant": (n * m * 2 + 5 * n) * itemsize,
+        "uniform": (n * m * 2 + 4 * n) * itemsize,
+        "batch": (n * m * 7) * itemsize,  # 5 diagonals + RHS in, x out
+    }

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are thin compositions of ``repro.core`` (already validated against
+dense ``np.linalg.solve`` oracles in tests/test_core_solvers.py), so the
+kernel tests form a chain: Pallas kernel == ref == dense solve.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import (
+    PeriodicTridiagFactor,
+    TridiagFactor,
+    PentaFactor,
+    penta_factor_solve,
+    penta_solve,
+    periodic_thomas_solve,
+    thomas_factor_solve,
+    thomas_solve,
+)
+
+
+def thomas_constant_ref(lhs: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """lhs: (3, N) stacked [a, inv_denom, c_hat]."""
+    f = TridiagFactor(a=lhs[0], inv_denom=lhs[1], c_hat=lhs[2])
+    return thomas_solve(f, d)
+
+
+def thomas_batch_ref(a, b, c, d) -> jnp.ndarray:
+    return thomas_factor_solve(a, b, c, d)
+
+
+def penta_constant_ref(lhs: jnp.ndarray, f: jnp.ndarray,
+                       uniform_eps: float | None = None) -> jnp.ndarray:
+    """lhs: (5, N) [eps, beta, inv_alpha, gamma, delta]; (4, N) if uniform."""
+    if uniform_eps is None:
+        fac = PentaFactor(eps=lhs[0], beta=lhs[1], inv_alpha=lhs[2],
+                          gamma=lhs[3], delta=lhs[4])
+    else:
+        n = lhs.shape[1]
+        eps = jnp.full((n,), uniform_eps, lhs.dtype).at[jnp.array([0, 1])].set(0)
+        fac = PentaFactor(eps=eps, beta=lhs[0], inv_alpha=lhs[1],
+                          gamma=lhs[2], delta=lhs[3])
+    return penta_solve(fac, f)
+
+
+def penta_batch_ref(a, b, c, d, e, f) -> jnp.ndarray:
+    return penta_factor_solve(a, b, c, d, e, f)
+
+
+def fused_cn_tridiag_ref(pf: PeriodicTridiagFactor, sigma: float,
+                         c: jnp.ndarray) -> jnp.ndarray:
+    """One periodic CN diffusion step: explicit stencil then periodic solve."""
+    rhs = (sigma * jnp.roll(c, 1, axis=0)
+           + (1.0 - 2.0 * sigma) * c
+           + sigma * jnp.roll(c, -1, axis=0))
+    return periodic_thomas_solve(pf, rhs)

@@ -1,0 +1,145 @@
+"""Pallas TPU kernels: batched Thomas solves, constant-LHS vs per-system LHS.
+
+cuThomasConstantBatch (paper) -> ``thomas_constant_kernel``:
+    * RHS block   (N, BLOCK_M) — interleaved, one system per lane.
+    * LHS block   (3, N)       — a / inv_denom / c_hat stored ONCE; its
+      BlockSpec index_map is constant so the same VMEM block serves every
+      grid step (the broadcast-read of the paper, made explicit).
+    * HBM traffic per block: (N*BLOCK_M) in + (N*BLOCK_M) out + 3N shared.
+
+cuThomasBatch (baseline, prior SoTA) -> ``thomas_batch_kernel``:
+    * each lane owns its LHS: three (N, BLOCK_M) diagonal blocks + RHS.
+    * factorisation is fused into the solve (the real cuThomasBatch destroys
+      the LHS copy in-place, forcing a re-factor each step).
+    * HBM traffic per block: 4*(N*BLOCK_M) in + (N*BLOCK_M) out.
+
+The sweeps are sequential in N (Thomas is inherently serial per system) and
+vectorised across 128 lanes; ``unroll`` trades instruction count for VREG
+pressure along the sublane axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import row, scalar, store_row
+
+
+def thomas_constant_kernel(lhs_ref, d_ref, x_ref, *, n: int, unroll: int):
+    """lhs_ref: (3, N) = [a, inv_denom, c_hat];  d_ref/x_ref: (N, BLOCK_M)."""
+    m = d_ref.shape[1]
+
+    # --- forward sweep: d_hat_i = (d_i - a_i d_hat_{i-1}) * inv_i ----------
+    dh0 = row(d_ref, 0, m) * scalar(lhs_ref, 1, 0)
+    store_row(x_ref, 0, dh0)
+
+    def fwd(i, dh_prev):
+        a_i = scalar(lhs_ref, 0, i)
+        inv_i = scalar(lhs_ref, 1, i)
+        dh = (row(d_ref, i, m) - a_i * dh_prev) * inv_i
+        store_row(x_ref, i, dh)
+        return dh
+
+    last = jax.lax.fori_loop(1, n, fwd, dh0, unroll=unroll)
+
+    # --- backward sweep: x_i = d_hat_i - c_hat_i x_{i+1} -------------------
+    def bwd(k, x_next):
+        i = n - 2 - k
+        x_i = row(x_ref, i, m) - scalar(lhs_ref, 2, i) * x_next
+        store_row(x_ref, i, x_i)
+        return x_i
+
+    jax.lax.fori_loop(0, n - 1, bwd, last, unroll=unroll)
+
+
+def thomas_batch_kernel(a_ref, b_ref, c_ref, d_ref, x_ref, scratch_ref, *,
+                        n: int, unroll: int):
+    """Per-system LHS baseline; factor fused with solve (cuThomasBatch).
+
+    a/b/c/d: (N, BLOCK_M) per-lane copies. scratch holds c_hat (N, BLOCK_M).
+    """
+    m = d_ref.shape[1]
+    inv0 = 1.0 / row(b_ref, 0, m)
+    chat0 = row(c_ref, 0, m) * inv0
+    store_row(scratch_ref, 0, chat0)
+    dh0 = row(d_ref, 0, m) * inv0
+    store_row(x_ref, 0, dh0)
+
+    def fwd(i, carry):
+        chat_prev, dh_prev = carry
+        a_i = row(a_ref, i, m)
+        inv = 1.0 / (row(b_ref, i, m) - a_i * chat_prev)
+        chat = row(c_ref, i, m) * inv
+        store_row(scratch_ref, i, chat)
+        dh = (row(d_ref, i, m) - a_i * dh_prev) * inv
+        store_row(x_ref, i, dh)
+        return chat, dh
+
+    _, last = jax.lax.fori_loop(1, n, fwd, (chat0, dh0), unroll=unroll)
+
+    def bwd(k, x_next):
+        i = n - 2 - k
+        x_i = row(x_ref, i, m) - row(scratch_ref, i, m) * x_next
+        store_row(x_ref, i, x_i)
+        return x_i
+
+    jax.lax.fori_loop(0, n - 1, bwd, last, unroll=unroll)
+
+
+def _const_lhs_spec(n: int):
+    # constant index_map: the SAME (3, N) block for every grid step — the
+    # single global LHS copy.
+    return pl.BlockSpec((3, n), lambda j: (0, 0))
+
+
+def _col_spec(n: int, block_m: int):
+    return pl.BlockSpec((n, block_m), lambda j: (0, j))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "unroll", "interpret"))
+def thomas_constant_pallas(lhs: jax.Array, d: jax.Array, *, block_m: int = 128,
+                           unroll: int = 1, interpret: bool = True) -> jax.Array:
+    """lhs: (3, N) stacked [a, inv_denom, c_hat]; d: (N, M), M % block_m == 0."""
+    n, m = d.shape
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        functools.partial(thomas_constant_kernel, n=n, unroll=unroll),
+        grid=grid,
+        in_specs=[_const_lhs_spec(n), _col_spec(n, block_m)],
+        out_specs=_col_spec(n, block_m),
+        out_shape=jax.ShapeDtypeStruct((n, m), d.dtype),
+        interpret=interpret,
+    )(lhs, d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "unroll", "interpret"))
+def thomas_batch_pallas(a, b, c, d, *, block_m: int = 128,
+                        unroll: int = 1, interpret: bool = True) -> jax.Array:
+    """Baseline: a/b/c/d all (N, M) per-system interleaved copies."""
+    n, m = d.shape
+    grid = (m // block_m,)
+    spec = _col_spec(n, block_m)
+    return pl.pallas_call(
+        functools.partial(thomas_batch_kernel, n=n, unroll=unroll),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), d.dtype),
+        scratch_shapes=[pltpu.VMEM((n, block_m), d.dtype)],
+        interpret=interpret,
+    )(a, b, c, d)
+
+
+def hbm_traffic_bytes(n: int, m: int, itemsize: int = 4) -> dict:
+    """Analytic HBM<->VMEM traffic — the quantity the paper's speed-up comes
+    from (roofline memory term for these bandwidth-bound kernels)."""
+    return {
+        "constant": (n * m * 2 + 3 * n) * itemsize,      # RHS in + x out + LHS once/block*
+        "batch": (n * m * 5) * itemsize,                 # 3 diagonals + RHS in, x out
+        # *the shared LHS re-fetch is once per grid block, negligible for M >> block
+    }

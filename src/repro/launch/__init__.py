@@ -1,0 +1,2 @@
+# NOTE: deliberately empty — launch modules control XLA_FLAGS before any jax
+# import; nothing here may import jax.

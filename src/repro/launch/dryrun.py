@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked) -----------
+import argparse          # noqa: E402
+import json              # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell: build the jitted step
+(train_step for train shapes, serve prefill/decode for inference shapes) with
+full sharding annotations, ``.lower()`` it against ShapeDtypeStruct inputs
+(no allocation — the 1T-param configs never materialise), ``.compile()`` it
+for the production mesh, and dump memory/cost/collective analysis to JSON.
+
+    python -m repro.launch.dryrun --arch mistral-large-123b --shape train_4k
+    python -m repro.launch.dryrun --all            # every cell, both meshes
+
+A compile failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the system, not an environment limitation.
+"""
+
+
+def _parse_rules(kvs):
+    out = {}
+    for kv in kvs or []:
+        k, v = kv.split("=", 1)
+        out[k] = [tuple(v.split("+"))] if v else []
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rules_overrides=None, accum: int = 1, tag: str = "",
+             moe_local: bool = False, grad_constrain: bool = False,
+             no_remat: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import SHAPES, get_config, input_specs, shape_applicable
+    from repro.launch import analytic_cost
+    from repro.launch.hlo_analysis import (
+        collective_bytes, model_flops, roofline_terms)
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import build_model
+    from repro.models.params import ParamSpec, abstract_params
+    from repro.sharding import LogicalRules, ShardingCtx
+    from repro.train import (AdamW, batch_shardings, make_decode_step,
+                             make_prefill_step, make_train_step,
+                             train_step_shardings, warmup_cosine)
+
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if moe_local:
+        mode = moe_local if isinstance(moe_local, str) else "local"
+        cfg = _dc.replace(cfg, moe_dispatch=mode)
+    if no_remat:
+        cfg = _dc.replace(cfg, remat=False)
+    seq, batch, kind = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+           "kind": kind, "seq": seq, "batch": batch, "tag": tag,
+           "variant": {"moe_local": moe_local,
+                       "grad_constrain": grad_constrain,
+                       "no_remat": no_remat,
+                       "rules": {k: [list(c) for c in v] for k, v in
+                                 (rules_overrides or {}).items()}}}
+
+    ok, reason = shape_applicable(cfg, shape_name)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rules = LogicalRules.default()
+    if rules_overrides:
+        rules = rules.override(**rules_overrides)
+    sctx = ShardingCtx(mesh=mesh, rules=rules)
+    model = build_model(cfg)
+    pspecs = model.param_specs()
+    p_abs = abstract_params(pspecs)
+    p_sh = sctx.tree_shardings(pspecs)
+    specs = input_specs(cfg, shape_name)
+
+    # ---- parameter accounting (for MODEL_FLOPS) -------------------------
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    total = active = 0.0
+    for path, s in jax.tree_util.tree_flatten_with_path(
+            pspecs, is_leaf=is_spec)[0]:
+        n = float(np.prod(s.shape))
+        total += n
+        keys = [getattr(k, "key", str(k)) for k in path]
+        if keys == ["embed"]:
+            continue  # input table: gather, not matmul
+        frac = (cfg.top_k / cfg.n_experts) if "experts" in s.names else 1.0
+        active += n * frac
+    rec["params_total"] = total
+    rec["params_active"] = active
+
+    # ---- build + lower + compile ----------------------------------------
+    if kind == "train":
+        opt = AdamW(lr=warmup_cosine(3e-4, 2000, 100000),
+                    opt_dtype=jnp.bfloat16 if cfg.opt_dtype == "bfloat16"
+                    else jnp.float32)
+        step_fn = make_train_step(model, sctx, opt, accum=accum,
+                                  constrain_grads=grad_constrain)
+        in_sh, out_sh = train_step_shardings(model, sctx, opt, specs["batch"])
+        o_abs = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+            opt.state_specs(pspecs), is_leaf=is_spec)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0, 1))
+        args = (p_abs, o_abs, specs["batch"], step_abs)
+        tokens = batch * seq
+    elif kind == "prefill":
+        step_fn = make_prefill_step(model, sctx)
+        b_sh = batch_shardings(sctx, specs["batch"])
+        jitted = jax.jit(step_fn, in_shardings=(p_sh, b_sh))
+        args = (p_abs, specs["batch"])
+        tokens = batch * seq
+    else:  # decode
+        step_fn = make_decode_step(model, sctx)
+        c_sh = sctx.tree_shardings(model.cache_specs(batch, seq))
+        t_sh = sctx.sharding(("act_batch",), (batch,))
+        s_sh = sctx.sharding((), ())
+        jitted = jax.jit(step_fn, in_shardings=(p_sh, c_sh, t_sh, s_sh),
+                         donate_argnums=(1,))
+        args = (p_abs, specs["cache"], specs["token"], specs["pos"])
+        tokens = batch  # one new token per sequence
+
+    lowered = jitted.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    # ---- analyses ---------------------------------------------------------
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    rec["cost_analysis"] = {
+        "flops_per_device": flops,
+        "bytes_accessed_per_device": bytes_acc,
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in dir(ma)
+            if k.endswith("_in_bytes") and isinstance(getattr(ma, k), int)
+        } if ma is not None else None
+    except Exception as e:  # pragma: no cover - backend-dependent
+        rec["memory_analysis"] = {"error": str(e)}
+
+    coll = collective_bytes(compiled.as_text())
+    rec["collectives"] = coll
+
+    # ---- analytic compute/memory terms (HLO flops undercount scan bodies;
+    # see hlo_analysis.py docstring + EXPERIMENTS.md §Dry-run) --------------
+    af = analytic_cost.flops_for_cell(cfg, kind, batch, seq)
+    cache_bytes_total = 0.0
+    if kind == "decode":
+        cache_bytes_total = float(sum(
+            np.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+            for s in jax.tree_util.tree_leaves(
+                model.cache_specs(batch, seq), is_leaf=is_spec)))
+    ab = analytic_cost.bytes_for_cell(
+        cfg, kind, batch, seq, n_dev=n_dev, params_total=total,
+        params_active=active, cache_bytes_total=cache_bytes_total)
+    rec["analytic"] = {"flops_global": af["total"],
+                       "flops_components_fwd": af["components_fwd"],
+                       "bytes_per_device": ab["total"],
+                       "bytes_components": ab["components"],
+                       "cache_bytes_total": cache_bytes_total}
+
+    # ---- roofline (analytic compute/memory + measured collectives) -------
+    rl = roofline_terms(af["total"] / n_dev, ab["total"],
+                        coll["total_bytes"])
+    rec["roofline"] = rl
+    rec["roofline_raw_hlo"] = roofline_terms(flops, bytes_acc,
+                                             coll["total_bytes"])
+
+    # useful-FLOP accounting
+    attn = _attn_flops(cfg, kind, batch, seq)
+    mf = model_flops(cfg, kind, tokens, active, total, attn)
+    rec["model_flops"] = mf
+    rec["useful_flop_ratio"] = (mf["model_flops"] / af["total"]
+                                if af["total"] else 0.0)
+    # roofline fraction: useful compute time over the dominant-term time
+    useful_compute_s = mf["model_flops"] / n_dev / 197e12
+    rec["roofline_fraction"] = (useful_compute_s / rl["bound_s"]
+                                if rl["bound_s"] else 0.0)
+    rec["n_devices"] = n_dev
+    rec["status"] = "ok"
+    return rec
+
+
+def _attn_flops(cfg, kind, B, S):
+    """Documented approximation of 'useful' attention/SSD FLOPs (the part of
+    MODEL_FLOPS not captured by k*N*D)."""
+    hd, H = cfg.hd, cfg.n_heads
+    mult = 3.0 if kind == "train" else 1.0  # bwd ~ 2x fwd
+
+    def self_attn(n_layers, s_eff, causal=True):
+        if kind == "decode":
+            return 4.0 * B * s_eff * H * hd * n_layers
+        f = 4.0 * B * S * s_eff * H * hd * n_layers
+        return f * (0.5 if causal else 1.0)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return mult * self_attn(cfg.n_layers, S)
+    if fam == "hybrid":
+        pat = cfg.block_pattern
+        n_attn = (cfg.n_layers // len(pat)) * sum(1 for k in pat if k == "attn")
+        w = min(cfg.window, S)
+        return mult * self_attn(n_attn, w)
+    if fam == "ssm":
+        # SSD intra-chunk + state flops per layer ~ 2BS(Q(N+P) + 2NP)
+        Q, N, P = cfg.ssm_chunk, cfg.ssm_state, cfg.ssm_head_dim
+        per_tok = 2.0 * (Q * (N + P) + 2 * N * P) * cfg.ssm_heads * 0 + \
+            2.0 * (Q * N + Q * P + 2 * N * P)
+        toks = B if kind == "decode" else B * S
+        return mult * per_tok * toks * cfg.d_inner / cfg.ssm_head_dim
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        G = cfg.n_layers // k
+        f = self_attn(G * (k - 1), S)
+        fc = self_attn(G, cfg.n_img_tokens, causal=False)
+        return mult * (f + fc)
+    if fam == "encdec":
+        F = cfg.n_frames
+        if kind == "decode":
+            self_f = 4.0 * B * S * H * hd * cfg.dec_layers
+            cross_f = 4.0 * B * F * H * hd * cfg.dec_layers
+            return self_f + cross_f
+        enc = 4.0 * B * F * F * H * hd * cfg.enc_layers
+        dec = 4.0 * B * S * S * H * hd * cfg.dec_layers * 0.5
+        cross = 4.0 * B * S * F * H * hd * cfg.dec_layers
+        return mult * (enc + dec + cross)
+    return 0.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--rules", nargs="*", help="logical rule overrides k=ax1+ax2")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--moe-local", nargs="?", const="local", default=False,
+                    help="MoE dispatch mode: (no value)=local, or local2")
+    ap.add_argument("--grad-constrain", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ARCH_IDS, SHAPES  # light import (no jax use)
+        cells = [(a, s, mp) for a in ARCH_IDS for s in SHAPES
+                 for mp in (False, True)]
+        failures = 0
+        for arch, shape, mp in cells:
+            suffix = "__pod2" if mp else ""
+            name = f"{arch}__{shape}{suffix}{('__' + args.tag) if args.tag else ''}.json"
+            path = os.path.join(args.out, name)
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {name}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--out", args.out]
+            if mp:
+                cmd.append("--multi-pod")
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            if args.rules:
+                cmd += ["--rules"] + args.rules
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            dt = time.time() - t0
+            if r.returncode != 0 and not os.path.exists(path):
+                failures += 1
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if mp else "16x16",
+                               "status": "error",
+                               "error": r.stderr[-4000:]}, f, indent=1)
+            status = json.load(open(path)).get("status")
+            print(f"[{status}] {name} ({dt:.0f}s)")
+        sys.exit(1 if failures else 0)
+
+    # single cell
+    try:
+        rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                       rules_overrides=_parse_rules(args.rules),
+                       accum=args.accum, tag=args.tag,
+                       moe_local=args.moe_local,
+                       grad_constrain=args.grad_constrain,
+                       no_remat=args.no_remat)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multi_pod else "16x16",
+               "status": "error", "error": traceback.format_exc()[-6000:]}
+    suffix = "__pod2" if args.multi_pod else ""
+    tag = f"__{args.tag}" if args.tag else ""
+    from repro.configs import _norm
+    name = f"{_norm(args.arch)}__{args.shape}{suffix}{tag}.json"
+    path = os.path.join(args.out, name)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("error",)}, indent=1)[:2000])
+    if rec["status"] == "error":
+        print(rec["error"][-3000:], file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+IMPORTANT CAVEAT (measured, see EXPERIMENTS.md §Dry-run): XLA's
+``cost_analysis()`` visits each ``while`` body ONCE — a scan-over-layers
+model reports ~1 layer of FLOPs. We therefore:
+
+  * parse the optimized HLO *with while-loop trip-count correction* for the
+    collective-bytes term (each collective's operand bytes are multiplied by
+    the product of trip counts of the loops enclosing its computation) —
+    this is exact for the real scanned module;
+  * compute the compute/memory terms analytically from the architecture
+    (``analytic_cost.py`` — exact for the major ops of our own code), and
+    report the raw HLO numbers alongside for reference.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+(?:\([^)]*\)\s*->.*)?{\s*$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:to_apply|body|condition|calls|branch_computations)=\{?%?([\w\.\-,%\s]+)\}?")
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _result_bytes(rhs: str) -> int:
+    """Bytes of the result type at the start of an instruction RHS."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    seg = rhs[: i + 1]
+                    return sum(_shape_bytes(d, s)
+                               for d, s in _SHAPE_RE.findall(seg))
+        return 0
+    tok = rhs.split(" ", 1)[0]
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tok))
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+class HloModule:
+    """Light structural parse of optimized HLO text: computations, their
+    instructions, while-loop trip counts, and a call graph."""
+
+    def __init__(self, text: str):
+        self.comp_instrs: dict[str, list[tuple[str, str]]] = {}
+        self.instr_bytes: dict[str, int] = {}
+        cur = None
+        for line in text.splitlines():
+            stripped = line.rstrip()
+            # computation header: "name (params...) -> type {" (or ENTRY ...)
+            if stripped.endswith("{") and (" -> " in stripped
+                                           or stripped.lstrip().startswith("ENTRY")):
+                head = stripped.lstrip()
+                if head.startswith("ENTRY"):
+                    head = head[len("ENTRY"):].lstrip()
+                name = head.split("(", 1)[0].strip().lstrip("%").rstrip()
+                if name:
+                    cur = name
+                    self.comp_instrs.setdefault(cur, [])
+                    continue
+            if stripped.strip() == "}":
+                continue
+            if cur is None:
+                continue
+            m = _DEF_RE.match(stripped)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            self.comp_instrs[cur].append((name, rhs))
+            self.instr_bytes[name] = _result_bytes(rhs)
+
+        # map computation -> the multiplier of how many times it runs
+        self._multiplier: dict[str, float] = {}
+        self._compute_multipliers()
+
+    # -- trip counts --------------------------------------------------------
+    def _cond_trip_count(self, cond_comp: str) -> float:
+        """Scan conditions compare the induction var against a constant."""
+        best = None
+        for name, rhs in self.comp_instrs.get(cond_comp, []):
+            cm = re.search(r"constant\((-?\d+)\)", rhs)
+            if cm and "s32[]" in rhs or (cm and "s64[]" in rhs):
+                v = int(cm.group(1))
+                if v > 0:
+                    best = v if best is None else max(best, v)
+        return float(best) if best else 1.0
+
+    def _compute_multipliers(self):
+        entry = None
+        for comp in self.comp_instrs:
+            if ".clone" not in comp and entry is None:
+                entry = comp
+        # build call edges with per-edge multiplier
+        edges: dict[str, list[tuple[str, float]]] = {c: [] for c in self.comp_instrs}
+        for comp, instrs in self.comp_instrs.items():
+            for name, rhs in instrs:
+                if " while(" in rhs or rhs.startswith("while("):
+                    bm = re.search(r"body=%?([\w\.\-]+)", rhs)
+                    cm = re.search(r"condition=%?([\w\.\-]+)", rhs)
+                    if bm and bm.group(1) in self.comp_instrs:
+                        trips = self._cond_trip_count(cm.group(1)) if cm else 1.0
+                        edges[comp].append((bm.group(1), trips))
+                    continue
+                for attr in ("to_apply", "calls"):
+                    am = re.search(attr + r"=%?([\w\.\-]+)", rhs)
+                    if am and am.group(1) in self.comp_instrs:
+                        edges[comp].append((am.group(1), 1.0))
+                cm2 = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+                if cm2:
+                    for b in _OPERAND_NAME_RE.findall(cm2.group(1)):
+                        if b in self.comp_instrs:
+                            edges[comp].append((b, 1.0))
+
+        mult: dict[str, float] = {c: 0.0 for c in self.comp_instrs}
+        roots = set(self.comp_instrs) - {
+            child for outs in edges.values() for child, _ in outs}
+        stack = [(r, 1.0) for r in roots]
+        seen_guard = 0
+        while stack and seen_guard < 200000:
+            seen_guard += 1
+            comp, m = stack.pop()
+            if comp not in mult:
+                continue
+            mult[comp] += m
+            for child, trips in edges.get(comp, []):
+                stack.append((child, m * trips))
+        self._multiplier = mult
+
+    # -- collectives --------------------------------------------------------
+    def collective_bytes(self) -> dict:
+        out = {k: 0.0 for k in _COLLECTIVES}
+        counts = {k: 0 for k in _COLLECTIVES}
+        dyn_counts = {k: 0.0 for k in _COLLECTIVES}
+        for comp, instrs in self.comp_instrs.items():
+            m = self._multiplier.get(comp, 1.0) or 1.0
+            for name, rhs in instrs:
+                kind = None
+                for k in _COLLECTIVES:
+                    if re.search(rf"\b{k}(-start)?\(", rhs):
+                        kind = k
+                        break
+                if kind is None or f"{kind}-done" in rhs:
+                    continue
+                # operand bytes: look up operand instruction result sizes
+                paren = rhs.find("(")
+                seg = rhs[paren + 1:]
+                depth = 1
+                end = len(seg)
+                for i, ch in enumerate(seg):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i
+                            break
+                operands = _OPERAND_NAME_RE.findall(seg[:end])
+                b = sum(self.instr_bytes.get(o, 0) for o in operands)
+                if b == 0:
+                    # fall back to the result size (all-reduce: in == out)
+                    b = self.instr_bytes.get(name, 0)
+                out[kind] += b * m
+                counts[kind] += 1
+                dyn_counts[kind] += m
+        return {"by_kind": out, "counts": counts, "dynamic_counts": dyn_counts,
+                "total_bytes": sum(out.values())}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    return HloModule(hlo_text).collective_bytes()
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict:
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound,
+        "overlap_efficiency": bound / total if total else 0.0,
+    }
+
+
+def model_flops(cfg, shape_kind: str, tokens: int, n_params_active: float,
+                n_params_total: float, attn_flops: float) -> dict:
+    """MODEL_FLOPS = k . N_active . tokens (+ attention) — the 'useful'
+    fraction. k = 6 train (fwd+bwd), 2 inference."""
+    k = 6.0 if shape_kind == "train" else 2.0
+    mf = k * n_params_active * tokens + attn_flops
+    return {"model_flops": mf, "n_params_total": n_params_total,
+            "n_params_active": n_params_active, "k": k,
+            "attn_flops": attn_flops}

@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS first.
+"""
+
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data", "model"); 2 pods = 512 chips with a
+    leading "pod" axis (DCN)."""
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dry-run) "
+            f"or on real hardware")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_local_mesh(axes=("data", "model")):
+    """Single-device mesh for CPU tests/examples."""
+    import jax
+    import numpy as np
+    devs = np.array(jax.devices()[:1]).reshape((1,) * len(axes))
+    return jax.sharding.Mesh(devs, axes)

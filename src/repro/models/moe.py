@@ -1,0 +1,151 @@
+"""Token-choice top-k Mixture-of-Experts with expert parallelism.
+
+Dispatch is sort-based (argsort by expert id + capacity clipping) rather than
+the (T, E, C) one-hot einsum of Mesh-TF: with E = 384 (kimi-k2) and 1M-token
+global batches the one-hot dispatch tensor would be petabytes. The sorted
+(E, C, D) expert buffer shards over the ``model`` axis (expert parallelism);
+token->expert resharding lowers to scatter/gather collectives under SPMD.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import ShardingCtx
+from .config import ArchConfig
+from .params import ParamSpec
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.expert_d_ff
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    specs = {
+        "router": ParamSpec((D, E), ("embed", None), jnp.float32,
+                            scale=1.0 / np.sqrt(D)),
+        "wi": ParamSpec((E, D, F), ("experts", "embed", "expert_mlp"), dt),
+        "wg": ParamSpec((E, D, F), ("experts", "embed", "expert_mlp"), dt),
+        "wo": ParamSpec((E, F, D), ("experts", "expert_mlp", "embed"), dt,
+                        scale=1.0 / np.sqrt(F)),
+    }
+    if cfg.shared_expert:
+        specs["shared"] = {
+            "wi": ParamSpec((D, F), ("embed", "mlp"), dt),
+            "wg": ParamSpec((D, F), ("embed", "mlp"), dt),
+            "wo": ParamSpec((F, D), ("mlp", "embed"), dt, scale=1.0 / np.sqrt(F)),
+        }
+    return specs
+
+
+def _dispatch(xt, topw, topi, E: int, k: int, cap: int):
+    """Sort-based dispatch: tokens -> (E, cap, D) buffer + routing state.
+    All indexing is local to ``xt``'s token set (T, D)."""
+    T, D = xt.shape
+    eid = topi.reshape(-1)                                   # (T*k,)
+    order = jnp.argsort(eid, stable=True)
+    eid_s = eid[order]
+    tok_s = order // k
+    w_s = topw.reshape(-1)[order]
+
+    counts = jnp.zeros((E,), jnp.int32).at[eid].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(T * k) - starts[eid_s]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, eid_s * cap + pos_in_e, E * cap)  # E*cap = drop row
+
+    buf = jnp.zeros((E * cap + 1, D), xt.dtype)
+    buf = buf.at[slot].add(xt[tok_s] * keep[:, None].astype(xt.dtype))
+    return buf[: E * cap].reshape(E, cap, D), (slot, tok_s, w_s)
+
+
+def _combine(out_e, routing, T: int):
+    """Weighted scatter of expert outputs back to token order."""
+    slot, tok_s, w_s = routing
+    D = out_e.shape[-1]
+    E_cap = out_e.shape[0] * out_e.shape[1]
+    out_flat = jnp.concatenate(
+        [out_e.reshape(E_cap, D), jnp.zeros((1, D), out_e.dtype)], axis=0)
+    gathered = out_flat[slot] * w_s[:, None].astype(out_e.dtype)  # (T*k, D)
+    return jnp.zeros((T, D), out_e.dtype).at[tok_s].add(gathered)
+
+
+def moe_apply(p, x: jax.Array, sctx: ShardingCtx, cfg: ArchConfig):
+    """x: (B, S, D) -> (out, aux_losses).
+
+    Two dispatch modes (cfg.moe_dispatch):
+      * "global" — one sorted dispatch over all tokens; the scatter crosses
+        the token(data)->expert(model) sharding boundary, which the SPMD
+        partitioner resolves with heavy gathers (the measured baseline).
+      * "local"  — per-data-shard dispatch (vmap over DP slices, indices stay
+        shard-local, capacity is per shard) and ONE resharding boundary at
+        the (E, DP*cap_l, D) expert buffer — lowers to all-to-all, the
+        production EP pattern (§Perf iteration).
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                                 # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    eid = topi.reshape(-1)
+
+    def expert_ffn(hidden):
+        hidden = sctx.constrain(hidden, ("act_experts", None, None))
+        h = jnp.einsum("ecd,edf->ecf", hidden, p["wi"])
+        g = jnp.einsum("ecd,edf->ecf", hidden, p["wg"])
+        act = jax.nn.silu(g) * h
+        out_e = jnp.einsum("ecf,efd->ecd", act, p["wo"])
+        return sctx.constrain(out_e, ("act_experts", None, None))
+
+    mode = getattr(cfg, "moe_dispatch", "global")
+    if mode in ("local", "local2"):
+        sizes = dict(zip(sctx.mesh.axis_names, sctx.mesh.devices.shape))
+        DP = sizes.get("pod", 1) * sizes.get("data", 1)
+        if T % DP != 0 or T // DP < 1:
+            DP = 1
+        Tl = T // DP
+        cap = max(int(np.ceil(cfg.capacity_factor * Tl * k / E)), 1)
+
+        xs = xt.reshape(DP, Tl, D)
+        ws = topw.reshape(DP, Tl, k)
+        ids = topi.reshape(DP, Tl, k)
+        xs = sctx.constrain(xs, ("act_batch", None, None))
+
+        # 1) per-shard dispatch (vmapped; scatter indices stay shard-local)
+        bufs, routing = jax.vmap(
+            lambda xl, wl, il: _dispatch(xl, wl, il, E, k, cap))(xs, ws, ids)
+        # 2) ONE resharding boundary: (DP@data, E, cap, D) -> (E@model, ., .)
+        merged = jnp.moveaxis(bufs, 0, 1).reshape(E, DP * cap, D)
+        if cfg.moe_dispatch == "local2":
+            # 2D expert-buffer layout: experts@model AND capacity@data, so
+            # the FFN einsums keep a data-parallel batch dim instead of
+            # all-reducing partial sums over the data axis (§Perf iter 2).
+            merged = sctx.constrain(merged, ("act_experts", "act_batch", None))
+        out_e = expert_ffn(merged)                           # all-to-all here
+        out_e = jnp.moveaxis(out_e.reshape(E, DP, cap, D), 1, 0)
+        out_e = sctx.constrain(out_e, ("act_batch", None, None, None))
+        # 3) per-shard combine
+        out = jax.vmap(lambda oe, r: _combine(oe, r, Tl))(out_e, routing)
+        out = out.reshape(B, S, D)
+    else:
+        cap = max(int(np.ceil(cfg.capacity_factor * T * k / E)), 1)
+        hidden, routing = _dispatch(xt, topw, topi, E, k, cap)
+        out = _combine(expert_ffn(hidden), routing, T)
+        out = out.reshape(B, S, D)
+
+    if cfg.shared_expert:
+        sh = p["shared"]
+        hs = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sh["wg"])) \
+            * jnp.einsum("bsd,df->bsf", x, sh["wi"])
+        out = out + jnp.einsum("bsf,fd->bsd", hs, sh["wo"])
+
+    # ---- aux losses (load balance + router z) ---------------------------
+    me = probs.mean(axis=0)                                  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[eid].add(1.0) / (T * k)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, {"lb_loss": lb_loss, "router_z": z_loss}

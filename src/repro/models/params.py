@@ -1,0 +1,61 @@
+"""Parameter specification trees: one definition -> init / eval_shape / shardings.
+
+Model builders return nested dicts of ``ParamSpec``. From a spec tree we can
+  * ``init_params``      — materialise real arrays (smoke tests, real training),
+  * ``abstract_params``  — ShapeDtypeStruct stand-ins (the multi-pod dry-run
+    never allocates the 1T-param configs),
+  * ``ShardingCtx.tree_shardings`` — NamedShardings via the logical names.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    names: tuple                 # logical axis names, len == len(shape)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"         # normal | zeros | ones | scaled
+    scale: float | None = None   # overrides the fan-in default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.names), (self.shape, self.names)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_size(spec_tree) -> int:
+    return int(sum(np.prod(s.shape) for s in
+                   jax.tree_util.tree_leaves(spec_tree, is_leaf=_is_spec)))
+
+
+def abstract_params(spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree,
+        is_leaf=_is_spec)
+
+
+def init_params(spec_tree, rng: jax.Array):
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_spec)
+    out = []
+    for i, s in enumerate(leaves):
+        key = jax.random.fold_in(rng, i)
+        if s.init == "zeros":
+            arr = jnp.zeros(s.shape, s.dtype)
+        elif s.init == "ones":
+            arr = jnp.ones(s.shape, s.dtype)
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            scale = s.scale if s.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            arr = (scale * jax.random.normal(key, s.shape, jnp.float32)).astype(s.dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,77 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(x_t W_a),  i_t = sigmoid(x_t W_i)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+The sequence scan is ``repro.core.recurrence.linear_recurrence`` with
+per-token coefficients — the same engine as the paper's solver sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linear_recurrence
+from repro.sharding import ShardingCtx
+from .config import ArchConfig
+from .params import ParamSpec
+from .ssm import _causal_conv, _conv_step
+
+RG_C = 8.0
+
+
+def rglru_specs(cfg: ArchConfig) -> dict:
+    D, R, W = cfg.d_model, cfg.rnn_dim, cfg.conv_width
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "in_x": ParamSpec((D, R), ("embed", "mlp"), dt),
+        "in_gate": ParamSpec((D, R), ("embed", "mlp"), dt),
+        "conv": ParamSpec((W, R), ("conv", "mlp"), dt),
+        "w_a": ParamSpec((R, R), (None, "mlp"), dt, scale=1.0 / np.sqrt(R)),
+        "w_i": ParamSpec((R, R), (None, "mlp"), dt, scale=1.0 / np.sqrt(R)),
+        "lam": ParamSpec((R,), (None,), jnp.float32, init="zeros"),
+        "out": ParamSpec((R, D), ("mlp", "embed"), dt, scale=1.0 / np.sqrt(R)),
+    }
+
+
+def _gates(p, xr):
+    """xr: (..., R) post-conv branch input -> (log_a, gated_input)."""
+    r = jax.nn.sigmoid(jnp.einsum("...r,rq->...q", xr, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...r,rq->...q", xr, p["w_i"]).astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, mult * i * xr.astype(jnp.float32)
+
+
+def rglru_apply(p, x, sctx: ShardingCtx, cfg: ArchConfig):
+    """x: (B, S, D) -> (out, (h_last, conv_tail))."""
+    W = cfg.conv_width
+    xr = jnp.einsum("bsd,dr->bsr", x, p["in_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["in_gate"]))
+    conv_tail = xr[:, -(W - 1):]
+    xr = _causal_conv(xr, p["conv"])
+
+    a, q = _gates(p, xr)                                     # (B, S, R) fp32
+    a_t = jnp.moveaxis(a, 1, 0)                              # (S, B, R)
+    q_t = jnp.moveaxis(q, 1, 0)
+    h = linear_recurrence(a_t, q_t)                          # (S, B, R)
+    h = jnp.moveaxis(h, 0, 1).astype(x.dtype)                # (B, S, R)
+
+    out = jnp.einsum("bsr,rd->bsd", h * gate, p["out"])
+    out = sctx.constrain(out, ("act_batch", "act_res_seq", None))
+    return out, (h[:, -1].astype(jnp.float32), conv_tail)
+
+
+def rglru_decode_step(p, x_t, h_prev, conv_buf, cfg: ArchConfig):
+    """x_t: (B, D); h_prev: (B, R) fp32; conv_buf: (B, W-1, R)."""
+    xr = x_t @ p["in_x"]
+    gate = jax.nn.gelu(x_t @ p["in_gate"])
+    xr, buf = _conv_step(conv_buf, xr, p["conv"])
+    a, q = _gates(p, xr)
+    h = a * h_prev + q                                       # (B, R) fp32
+    out = (h.astype(x_t.dtype) * gate) @ p["out"]
+    return out, h, buf

@@ -1,0 +1,109 @@
+"""Transformer blocks (self / cross / MoE variants) shared by every
+attention-bearing family, in train, prefill and decode flavours."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ShardingCtx
+from .config import ArchConfig
+from .layers import (
+    attention_apply,
+    attention_prefill_kv,
+    attention_specs,
+    cache_write,
+    decode_attention,
+    mlp_apply,
+    mlp_apply_1tok,
+    mlp_specs,
+    rmsnorm,
+    rope,
+)
+from .moe import moe_apply, moe_specs
+from .params import ParamSpec
+
+
+def _f32(shape=()):
+    return ParamSpec(shape if shape else (1,), tuple([None] * max(len(shape), 1)),
+                     jnp.float32, init="zeros")
+
+
+def block_specs(cfg: ArchConfig, *, kind: str = "self",
+                kv_dim: int | None = None, moe: bool = False) -> dict:
+    D = cfg.d_model
+    s = {
+        "ln1": ParamSpec((D,), (None,), jnp.float32, init="zeros"),
+        "attn": attention_specs(cfg, kv_dim=kv_dim),
+        "ln2": ParamSpec((D,), (None,), jnp.float32, init="zeros"),
+        "mlp": moe_specs(cfg) if moe else mlp_specs(cfg),
+    }
+    if kind == "cross":
+        # llama-3.2-vision style gated cross-attention
+        s["gate_attn"] = _f32()
+        s["gate_mlp"] = _f32()
+    return s
+
+
+def block_apply(p, x, sctx: ShardingCtx, cfg: ArchConfig, *,
+                positions, causal=True, window=0, kv_input=None,
+                kind="self", moe=False, use_rope=True):
+    """Full-sequence block (train / prefill). Returns (x, aux)."""
+    h = attention_apply(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), sctx, cfg,
+                        positions=positions, causal=causal, window=window,
+                        kv_input=kv_input, use_rope=use_rope)
+    if kind == "cross":
+        h = jnp.tanh(p["gate_attn"].astype(x.dtype)) * h
+    x = x + h
+    aux = {}
+    if moe:
+        m, aux = moe_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), sctx, cfg)
+    else:
+        m = mlp_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), sctx)
+    if kind == "cross":
+        m = jnp.tanh(p["gate_mlp"].astype(x.dtype)) * m
+    return x + m, aux
+
+
+def block_prefill_kv(p, x, cfg: ArchConfig, positions, *, kv_input=None,
+                     use_rope=True):
+    """K/V cache entries for this block. Self-attention caches see the normed
+    block input (rotated at absolute positions); cross-attention caches see
+    the raw memory (``kv_input``), no RoPE. Layout (B, KV, S, hd)."""
+    if kv_input is None and use_rope:
+        src = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        return attention_prefill_kv(p["attn"], src, cfg, positions)
+    src = kv_input if kv_input is not None else rmsnorm(p["ln1"], x, cfg.norm_eps)
+    k = jnp.einsum("bsd,dgk->bsgk", src, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", src, p["attn"]["wv"])
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def block_decode(p, x, cache_k, cache_v, pos, sctx: ShardingCtx,
+                 cfg: ArchConfig, *, slot=None, slot_pos=None, moe=False,
+                 write=True, use_rope=True):
+    """Single-token block. x: (B, D). Returns (x, new_k, new_v)."""
+    xin = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if write:
+        k_new = jnp.einsum("bd,dgk->bgk", xin, p["attn"]["wk"])
+        v_new = jnp.einsum("bd,dgk->bgk", xin, p["attn"]["wv"])
+        if use_rope:
+            k_new = rope(k_new[:, None], jnp.asarray(pos)[None],
+                         cfg.rope_theta)[:, 0]
+        wslot = pos if slot is None else slot
+        cache_k = cache_write(cache_k, k_new, wslot)
+        cache_v = cache_write(cache_v, v_new, wslot)
+    h = decode_attention(p["attn"], xin, cache_k, cache_v, pos, sctx, cfg,
+                         slot_pos=slot_pos, use_rope=use_rope)
+    if "gate_attn" in p:
+        h = jnp.tanh(p["gate_attn"].astype(x.dtype)) * h
+    x = x + h
+    xin2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        m, _ = moe_apply(p["mlp"], xin2[:, None, :], sctx, cfg)
+        m = m[:, 0]
+    else:
+        m = mlp_apply_1tok(p["mlp"], xin2, sctx)
+    if "gate_mlp" in p:
+        m = jnp.tanh(p["gate_mlp"].astype(x.dtype)) * m
+    return x + m, cache_k, cache_v

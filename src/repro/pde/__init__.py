@@ -1,0 +1,15 @@
+"""PDE substrate: the paper's application layer.
+
+Batched 1-D Crank-Nicolson integration of the diffusion (paper §III.B) and
+hyperdiffusion (paper §IV.B) equations on periodic domains, plus a 2-D ADI
+scheme (paper §I motivates both). The RHS stencils are the cuSten-equivalent
+(``stencil.py``); the implicit solves are the paper's constant-LHS batch
+solvers.
+"""
+
+from .diffusion import DiffusionCN
+from .hyperdiffusion import HyperdiffusionCN
+from .adi2d import ADI2D
+from .stencil import apply_periodic_stencil
+
+__all__ = ["ADI2D", "DiffusionCN", "HyperdiffusionCN", "apply_periodic_stencil"]

@@ -1,0 +1,82 @@
+"""2-D ADI (alternating-direction implicit) diffusion on a periodic grid —
+the paper's §I motivating application for batched tridiagonal solves.
+
+Peaceman-Rachford splitting of  dC/dt = alpha (d2/dx2 + d2/dy2) C :
+
+    (1 - sx Dxx) C*      = (1 + sy Dyy) C^n        (x-implicit half step)
+    (1 - sy Dyy) C^{n+1} = (1 + sx Dxx) C*         (y-implicit half step)
+
+with s = alpha dt / (2 h^2). Each half step is a BATCH of 1-D periodic
+tridiagonal solves sharing one LHS — the x-sweep batches over y (and any
+field batch), the y-sweep over x. This is exactly the "single LHS, many
+interleaved RHS" shape the paper optimises.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import periodic_thomas_factor, periodic_thomas_solve
+from .stencil import apply_periodic_stencil
+
+
+@dataclasses.dataclass(frozen=True)
+class ADI2D:
+    nx: int
+    ny: int
+    dt: float
+    alpha: float = 1.0
+    dtype: object = jnp.float32
+
+    @property
+    def sx(self) -> float:
+        return self.alpha * self.dt / (2.0 * (1.0 / self.nx) ** 2)
+
+    @property
+    def sy(self) -> float:
+        return self.alpha * self.dt / (2.0 * (1.0 / self.ny) ** 2)
+
+    def _factor(self, n, s):
+        a = jnp.full((n,), -s, self.dtype)
+        b = jnp.full((n,), 1.0 + 2.0 * s, self.dtype)
+        c = jnp.full((n,), -s, self.dtype)
+        return periodic_thomas_factor(a, b, c)
+
+    def step_fn(self):
+        fx = self._factor(self.nx, self.sx)
+        fy = self._factor(self.ny, self.sy)
+        sx, sy = self.sx, self.sy
+
+        def step(field):
+            """field: (NX, NY) or (NX, NY, B)."""
+            flat = field.reshape(field.shape[0], -1)          # x-major
+            # x-implicit: RHS = (1 + sy Dyy) C  (apply along y)
+            cy = field.reshape(field.shape[0], field.shape[1], -1)
+            rhs = cy + sy * apply_periodic_stencil(
+                jnp.moveaxis(cy, 1, 0), [1.0, -2.0, 1.0]).swapaxes(0, 1)
+            c_star = periodic_thomas_solve(fx, rhs.reshape(field.shape[0], -1))
+            c_star = c_star.reshape(cy.shape)
+            # y-implicit: RHS = (1 + sx Dxx) C*  (apply along x)
+            rhs2 = c_star + sx * apply_periodic_stencil(c_star, [1.0, -2.0, 1.0])
+            rhs2_t = jnp.moveaxis(rhs2, 1, 0)                 # (NY, NX, B)
+            c_next = periodic_thomas_solve(fy, rhs2_t.reshape(field.shape[1], -1))
+            c_next = jnp.moveaxis(c_next.reshape(rhs2_t.shape), 0, 1)
+            return c_next.reshape(field.shape)
+
+        return step
+
+    def run(self, field0: jax.Array, n_steps: int):
+        step = self.step_fn()
+        out, _ = jax.lax.scan(lambda f, _: (step(f), None), field0,
+                              None, length=n_steps)
+        return out
+
+    @staticmethod
+    def analytic(x, y, t, kx: int = 1, ky: int = 1, alpha: float = 1.0):
+        """C0 = sin(2 pi kx x) sin(2 pi ky y) -> decay exp(-4 pi^2 (kx^2+ky^2) alpha t)."""
+        decay = np.exp(-4 * np.pi ** 2 * (kx ** 2 + ky ** 2) * alpha * t)
+        return decay * np.sin(2 * np.pi * kx * x) * np.sin(2 * np.pi * ky * y)

@@ -1,0 +1,88 @@
+"""Batched periodic 1-D hyperdiffusion, Crank-Nicolson (paper §IV.B-C).
+
+    dC/dt = -D d4C/dx4,  periodic,  D = L = 1 after rescaling.
+
+Implicit LHS (Eq. 20a): a_i = e_i = sigma, b_i = d_i = -4 sigma,
+c_i = 1 + 6 sigma with sigma = dt / (2 dx^4) — a *uniform* pentadiagonal
+operator, so all three paper variants apply (cuPentBatch baseline,
+cuPentConstantBatch, cuPentUniformBatch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PentaOperator
+from repro.kernels import penta_constant
+from .stencil import cn_rhs_hyperdiffusion
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperdiffusionCN:
+    n: int
+    dt: float
+    backend: str = "core"       # core | pallas
+    mode: str = "constant"      # constant | uniform | batch (baseline)
+    batch: int | None = None    # required for mode="batch"
+    dtype: object = jnp.float32
+
+    @property
+    def dx(self) -> float:
+        return 1.0 / self.n
+
+    @property
+    def sigma(self) -> float:
+        return self.dt / (2.0 * self.dx ** 4)
+
+    def coefficients(self):
+        s = self.sigma
+        return (s, -4.0 * s, 1.0 + 6.0 * s, -4.0 * s, s)
+
+    def operator(self) -> PentaOperator:
+        return PentaOperator.create(*self.coefficients(), n=self.n,
+                                    mode=self.mode, periodic=True,
+                                    batch=self.batch, dtype=self.dtype)
+
+    def step_fn(self):
+        op = self.operator()
+        s = self.sigma
+
+        if self.backend == "core":
+            def step(field):
+                return op.solve(cn_rhs_hyperdiffusion(field, s))
+        elif self.backend == "pallas":
+            if self.mode == "batch":
+                raise ValueError("pallas backend benchmarks use constant/uniform")
+            pf = op._factor_for_solve()  # PeriodicPentaFactor
+            inner, Z, Minv, vcoef = pf.factor, pf.Z, pf.Minv, pf.vcoef
+
+            def step(field):
+                rhs = cn_rhs_hyperdiffusion(field, s)
+                y = penta_constant(inner, rhs, uniform=(self.mode == "uniform"))
+                # rank-4 Woodbury correction (cheap: 4xM dots)
+                from repro.core.penta import _vty
+                w = Minv @ _vty(vcoef, y)
+                return y - jnp.tensordot(Z, w, axes=([1], [0]))
+        else:
+            raise ValueError(f"unknown backend {self.backend!r}")
+        return op, step
+
+    def run(self, field0: jax.Array, n_steps: int, *, use_scan: bool = True):
+        _, step = self.step_fn()
+        if use_scan and self.backend == "core":
+            out, _ = jax.lax.scan(lambda f, _: (step(f), None), field0,
+                                  None, length=n_steps)
+            return out
+        f = field0
+        for _ in range(n_steps):
+            f = step(f)
+        return f
+
+    @staticmethod
+    def analytic(x: np.ndarray, t: float, k: int = 1) -> np.ndarray:
+        """C(x,0) = sin(2 pi k x) -> exp(-(2 pi k)^4 t) sin(2 pi k x)."""
+        return np.exp(-((2 * np.pi * k) ** 4) * t) * np.sin(2 * np.pi * k * x)

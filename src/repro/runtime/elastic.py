@@ -1,0 +1,63 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard the
+latest checkpoint onto it.
+
+Checkpoints store full logical arrays (ckpt/checkpoint.py), so resharding is
+restore + device_put under the new NamedShardings — no shard-file surgery.
+The policy keeps the model (TP) axis fixed and shrinks/grows the data axis,
+because optimizer state sharded over data re-balances for free while the
+model axis is baked into layout choices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import ckpt as ckpt_lib
+from repro.sharding import LogicalRules, ShardingCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple
+    axes: tuple
+    n_used: int
+    n_available: int
+
+    @property
+    def utilization(self) -> float:
+        return self.n_used / max(self.n_available, 1)
+
+
+def remesh_plan(n_available: int, *, model: int = 16,
+                axes=("data", "model")) -> MeshPlan:
+    """Largest (data, model) mesh that fits the surviving device count."""
+    if n_available < model:
+        # degenerate: shrink the model axis to the largest power of two left
+        m = 1 << (n_available.bit_length() - 1)
+        return MeshPlan((1, m), axes, m, n_available)
+    data = n_available // model
+    return MeshPlan((data, model), axes, data * model, n_available)
+
+
+def build_mesh(plan: MeshPlan):
+    import jax
+    n = int(np.prod(plan.shape))
+    devs = np.array(jax.devices()[:n]).reshape(plan.shape)
+    return jax.sharding.Mesh(devs, plan.axes)
+
+
+def elastic_restore(ckpt_dir: str, plan: MeshPlan, model, opt,
+                    rules: LogicalRules | None = None):
+    """Restore the latest checkpoint resharded for the new mesh. Returns
+    (params, opt_state, step, sctx)."""
+    mesh = build_mesh(plan)
+    sctx = ShardingCtx(mesh=mesh, rules=rules or LogicalRules.default())
+    pspecs = model.param_specs()
+    shardings = {
+        "params": sctx.tree_shardings(pspecs),
+        "opt": sctx.tree_shardings(opt.state_specs(pspecs)),
+    }
+    tree, step = ckpt_lib.restore(ckpt_dir, shardings=shardings)
+    return tree["params"], tree["opt"], step, sctx

@@ -1,0 +1,8 @@
+from .logical import (
+    DEFAULT_RULES,
+    LogicalRules,
+    ShardingCtx,
+    resolve_spec,
+)
+
+__all__ = ["DEFAULT_RULES", "LogicalRules", "ShardingCtx", "resolve_spec"]

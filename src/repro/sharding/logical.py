@@ -1,0 +1,139 @@
+"""Logical-axis sharding with divisibility-aware first-fit resolution.
+
+Every tensor dimension carries a logical name; rules map names to an ordered
+list of CANDIDATE mesh-axis groups. Resolution walks the dims of a tensor in
+order and assigns the first candidate whose mesh axes (a) all exist in the
+mesh, (b) are not already used by another dim of the same tensor, and
+(c) divide the dimension size evenly. Unresolvable dims stay replicated.
+
+This absorbs awkward published configs without special-casing:
+  * minitron-4b's 24 heads on a 16-way model axis -> heads stay replicated,
+    the d_ff / fused-QKV projections still shard;
+  * GQA kv=8 caches on model=16 -> `kv` fails, the next dim in the tensor
+    (`kv_seq` or `head_dim`) picks the axis up;
+  * MQA kv=1 -> always replicated, exactly what you want;
+  * single-pod vs multi-pod -> candidates name ("pod","data") and missing
+    axes are simply dropped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisGroup = tuple[str, ...]
+
+
+def _as_group(cand) -> AxisGroup:
+    if isinstance(cand, str):
+        return (cand,)
+    return tuple(cand)
+
+
+# Candidates are ordered: first-fit. Params use FSDP-style data sharding on
+# the "embed"-like dims and tensor parallelism on heads/mlp/vocab/experts;
+# activations shard batch over data axes and heads/mlp over model.
+DEFAULT_RULES: dict[str, list] = {
+    # ---- parameter dims ----
+    "vocab": ["model"],
+    "embed": [("pod", "data")],          # ZeRO-3 / FSDP shard of weights
+    "mlp": ["model"],
+    "heads": ["model"],
+    "kv": ["model"],
+    "head_dim": ["model"],
+    "experts": ["model"],                # expert parallelism
+    "expert_mlp": [],                    # within-expert ff dim (EP already used)
+    "layers": [],                        # scan axis — never sharded
+    "conv": [],
+    "state": [],                         # SSM state dim
+    # ---- activation dims ----
+    "act_batch": [("pod", "data")],
+    "act_seq": [],                       # attention-internal seq dim
+    "act_res_seq": [],                   # residual stream between blocks;
+                                         # ["model"] = Megatron sequence-parallel
+    "act_embed": [],
+    "act_heads": ["model"],
+    "act_mlp": ["model"],
+    "act_experts": ["model"],
+    "act_kv": ["model"],
+    "act_kv_seq": ["model"],             # decode-cache fallback chain kv -> kv_seq
+    "act_head_dim": ["model"],
+    "act_vocab": ["model"],
+    "act_state": [],
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    table: Mapping[str, list]
+
+    @classmethod
+    def default(cls) -> "LogicalRules":
+        return cls(dict(DEFAULT_RULES))
+
+    def override(self, **updates) -> "LogicalRules":
+        t = dict(self.table)
+        t.update(updates)
+        return LogicalRules(t)
+
+    def candidates(self, name: str) -> list[AxisGroup]:
+        return [_as_group(c) for c in self.table.get(name, [])]
+
+
+def resolve_spec(names: Sequence[str | None], shape: Sequence[int],
+                 mesh: Mesh, rules: LogicalRules) -> P:
+    """First-fit resolution of logical dim names -> PartitionSpec."""
+    if len(names) != len(shape):
+        raise ValueError(f"names {names} vs shape {shape}")
+    used: set[str] = set()
+    out: list = []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name, dim in zip(names, shape):
+        assigned = None
+        if name is not None:
+            for cand in rules.candidates(name):
+                axes = tuple(a for a in cand if a in axis_sizes)
+                if not axes or any(a in used for a in axes):
+                    continue
+                size = int(np.prod([axis_sizes[a] for a in axes]))
+                if size > 1 and dim % size == 0:
+                    assigned = axes if len(axes) > 1 else axes[0]
+                    used.update(axes)
+                    break
+        out.append(assigned)
+    # trailing Nones can be dropped but keep explicit for readability
+    return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Carries (mesh, rules) through model code."""
+
+    mesh: Mesh
+    rules: LogicalRules
+
+    def spec(self, names: Sequence[str | None], shape: Sequence[int]) -> P:
+        return resolve_spec(names, shape, self.mesh, self.rules)
+
+    def sharding(self, names, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+    def constrain(self, x: jax.Array, names: Sequence[str | None]) -> jax.Array:
+        """with_sharding_constraint by logical names (no-op if fully replicated)."""
+        spec = self.spec(names, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def tree_shardings(self, spec_tree) -> Any:
+        """Map a tree of ParamSpec-likes (objects with .shape and .names) to
+        NamedShardings."""
+        return jax.tree_util.tree_map(
+            lambda s: self.sharding(s.names, s.shape), spec_tree,
+            is_leaf=lambda s: hasattr(s, "names"))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,95 @@
+"""Sharded AdamW with configurable moment dtype + warmup-cosine schedule.
+
+Optimizer state inherits the parameter sharding (ZeRO-3 style: both are
+sharded over data AND model axes via the logical rules), so 1T-param configs
+fit 512 chips. ``opt_dtype="bfloat16"`` halves moment memory (kimi-k2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable                 # step -> learning rate
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip: float = 1.0
+    opt_dtype: Any = jnp.float32
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self.opt_dtype)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def state_specs(self, param_specs):
+        """Spec tree for the optimizer state (same logical names as params)."""
+        def conv(s: ParamSpec) -> ParamSpec:
+            return ParamSpec(s.shape, s.names, self.opt_dtype, init="zeros")
+        one = jax.tree_util.tree_map(conv, param_specs,
+                                     is_leaf=lambda x: isinstance(x, ParamSpec))
+        return {"m": one, "v": jax.tree_util.tree_map(lambda s: s, one)}
+
+    def update(self, grads, state, params, step):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip / (gnorm + 1e-9))
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr = self.lr(step)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            step_dir = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = -lr * (step_dir + self.weight_decay * p.astype(jnp.float32))
+            return (delta.astype(p.dtype), m_new.astype(self.opt_dtype),
+                    v_new.astype(self.opt_dtype))
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        deltas = treedef.unflatten([o[0] for o in out])
+        new_state = {
+            "m": treedef.unflatten([o[1] for o in out]),
+            "v": treedef.unflatten([o[2] for o in out]),
+        }
+        return deltas, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def apply_updates(params, deltas):
+    return jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype),
+                                  params, deltas)

@@ -1,0 +1,116 @@
+"""train_step / serve_step factories with full sharding annotations.
+
+``make_train_step`` returns a function suitable both for real execution
+(jitted, donated buffers) and for the multi-pod dry-run (``.lower()`` against
+ShapeDtypeStructs). Gradient accumulation over microbatches is a
+``lax.scan`` (constant HLO size).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.models.params import ParamSpec
+from repro.sharding import ShardingCtx
+from .optimizer import AdamW, apply_updates
+
+
+def batch_shardings(sctx: ShardingCtx, batch_specs: dict):
+    """NamedShardings for a batch dict of ShapeDtypeStructs."""
+    def one(s):
+        if s.ndim == 1:
+            return sctx.sharding(("act_batch",), s.shape)
+        if s.ndim == 0:
+            return sctx.sharding((), s.shape)
+        names = ("act_batch",) + (None,) * (s.ndim - 1)
+        return sctx.sharding(names, s.shape)
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+def cache_shardings(sctx: ShardingCtx, cache_spec_tree):
+    return sctx.tree_shardings(cache_spec_tree)
+
+
+def make_train_step(model: Model, sctx: ShardingCtx, opt: AdamW,
+                    *, accum: int = 1, constrain_grads: bool = False):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``constrain_grads`` pins each gradient to its parameter's sharding right
+    after value_and_grad — an explicit hint that lets the SPMD partitioner
+    reduce-scatter partial gradients instead of all-reducing them (§Perf
+    iteration; off by default = the measured baseline).
+    """
+    grad_shardings = None
+    if constrain_grads:
+        grad_shardings = sctx.tree_shardings(model.param_specs())
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, sctx)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        if grad_shardings is not None:
+            grads = jax.tree_util.tree_map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_shardings)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, step):
+        if accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                loss, _, g = grads_of(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+            # split the leading batch dim into microbatches
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            gz = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (gz, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        deltas, opt_state, opt_metrics = opt.update(grads, opt_state, params,
+                                                    step)
+        params = apply_updates(params, deltas)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(model: Model, sctx: ShardingCtx):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, sctx)
+    return prefill_step
+
+
+def make_decode_step(model: Model, sctx: ShardingCtx):
+    def decode_step(params, cache, token, pos):
+        return model.decode(params, cache, token, pos, sctx)
+    return decode_step
+
+
+def train_step_shardings(model: Model, sctx: ShardingCtx, opt: AdamW,
+                         batch_specs: dict):
+    """(in_shardings, out_shardings) pytrees for jit/lower of train_step."""
+    pspecs = model.param_specs()
+    p_sh = sctx.tree_shardings(pspecs)
+    o_sh = sctx.tree_shardings(opt.state_specs(pspecs))
+    b_sh = batch_shardings(sctx, batch_specs)
+    step_sh = sctx.sharding((), ())
+    in_sh = (p_sh, o_sh, b_sh, step_sh)
+    out_sh = (p_sh, o_sh, None)   # metrics unannotated (replicated scalars)
+    return in_sh, out_sh

@@ -1,0 +1,291 @@
+"""Correctness of the paper-core solvers against dense oracles."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PentaOperator,
+    TridiagOperator,
+    dense_penta,
+    dense_tridiag,
+    linear_recurrence,
+    linear_recurrence2,
+    penta_factor,
+    penta_solve,
+    periodic_penta_factor,
+    periodic_penta_solve,
+    periodic_thomas_factor,
+    periodic_thomas_solve,
+    thomas_factor,
+    thomas_solve,
+)
+
+
+def _rand_tridiag(rng, n, dominance=2.5):
+    """Random diagonally-dominant tridiagonal coefficient vectors."""
+    a = rng.uniform(-1, 1, n).astype(np.float32)
+    c = rng.uniform(-1, 1, n).astype(np.float32)
+    b = (np.abs(a) + np.abs(c) + dominance).astype(np.float32)
+    return a, b, c
+
+
+def _rand_penta(rng, n, dominance=4.0):
+    a = rng.uniform(-1, 1, n).astype(np.float32)
+    b = rng.uniform(-1, 1, n).astype(np.float32)
+    d = rng.uniform(-1, 1, n).astype(np.float32)
+    e = rng.uniform(-1, 1, n).astype(np.float32)
+    c = (np.abs(a) + np.abs(b) + np.abs(d) + np.abs(e) + dominance).astype(np.float32)
+    return a, b, c, d, e
+
+
+# ---------------------------------------------------------------------------
+# recurrence engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["scan", "assoc"])
+@pytest.mark.parametrize("reverse", [False, True])
+def test_linear_recurrence_matches_loop(method, reverse):
+    rng = np.random.default_rng(0)
+    n, m = 33, 5
+    p = rng.uniform(-0.9, 0.9, n).astype(np.float32)
+    q = rng.normal(size=(n, m)).astype(np.float32)
+    h = np.zeros((n, m), np.float32)
+    idx = range(n - 1, -1, -1) if reverse else range(n)
+    carry = np.zeros(m, np.float32)
+    for i in idx:
+        carry = p[i] * carry + q[i]
+        h[i] = carry
+    got = linear_recurrence(jnp.asarray(p), jnp.asarray(q), reverse=reverse, method=method)
+    np.testing.assert_allclose(np.asarray(got), h, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("method", ["scan", "assoc"])
+@pytest.mark.parametrize("reverse", [False, True])
+def test_linear_recurrence2_matches_loop(method, reverse):
+    rng = np.random.default_rng(1)
+    n, m = 29, 4
+    s = rng.uniform(-0.6, 0.6, n).astype(np.float32)
+    t = rng.uniform(-0.3, 0.3, n).astype(np.float32)
+    u = rng.normal(size=(n, m)).astype(np.float32)
+    h = np.zeros((n + 4, m), np.float32)  # padded
+    if reverse:
+        for i in range(n - 1, -1, -1):
+            h[i] = s[i] * h[i + 1] + t[i] * h[i + 2] + u[i]
+        want = h[:n]
+    else:
+        hh = np.zeros((n, m), np.float32)
+        h1 = np.zeros(m, np.float32)
+        h2 = np.zeros(m, np.float32)
+        for i in range(n):
+            hi = s[i] * h1 + t[i] * h2 + u[i]
+            hh[i] = hi
+            h2, h1 = h1, hi
+        want = hh
+    got = linear_recurrence2(jnp.asarray(s), jnp.asarray(t), jnp.asarray(u),
+                             reverse=reverse, method=method)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# Thomas (tridiagonal)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["scan", "assoc"])
+@pytest.mark.parametrize("n,m", [(4, 1), (16, 7), (128, 32), (257, 3)])
+def test_thomas_constant_vs_dense(method, n, m):
+    rng = np.random.default_rng(n * 1000 + m)
+    a, b, c = _rand_tridiag(rng, n)
+    d = rng.normal(size=(n, m)).astype(np.float32)
+    f = thomas_factor(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    x = np.asarray(thomas_solve(f, jnp.asarray(d), method=method))
+    A = np.asarray(dense_tridiag(a, b, c))
+    want = np.linalg.solve(A.astype(np.float64), d.astype(np.float64))
+    np.testing.assert_allclose(x, want, rtol=1e-4, atol=1e-4)
+
+
+def test_thomas_residual_single_rhs():
+    rng = np.random.default_rng(7)
+    n = 64
+    a, b, c = _rand_tridiag(rng, n)
+    d = rng.normal(size=n).astype(np.float32)
+    f = thomas_factor(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    x = np.asarray(thomas_solve(f, jnp.asarray(d)))
+    A = np.asarray(dense_tridiag(a, b, c))
+    np.testing.assert_allclose(A @ x, d, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [8, 65, 256])
+def test_periodic_thomas_vs_dense(n):
+    rng = np.random.default_rng(n)
+    a, b, c = _rand_tridiag(rng, n, dominance=3.0)
+    d = rng.normal(size=(n, 5)).astype(np.float32)
+    pf = periodic_thomas_factor(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    x = np.asarray(periodic_thomas_solve(pf, jnp.asarray(d)))
+    A = np.asarray(dense_tridiag(a, b, c, periodic=True))
+    want = np.linalg.solve(A.astype(np.float64), d.astype(np.float64))
+    np.testing.assert_allclose(x, want, rtol=2e-4, atol=2e-4)
+
+
+def test_thomas_paper_constant_coefficients():
+    """The paper's diffusion-equation matrix: a=c=-sigma, b=1+2sigma."""
+    n = 128
+    sigma = 0.37
+    a = -sigma * np.ones(n, np.float32)
+    b = (1 + 2 * sigma) * np.ones(n, np.float32)
+    c = -sigma * np.ones(n, np.float32)
+    rng = np.random.default_rng(3)
+    d = rng.normal(size=(n, 16)).astype(np.float32)
+    pf = periodic_thomas_factor(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    x = np.asarray(periodic_thomas_solve(pf, jnp.asarray(d)))
+    A = np.asarray(dense_tridiag(a, b, c, periodic=True))
+    want = np.linalg.solve(A.astype(np.float64), d.astype(np.float64))
+    np.testing.assert_allclose(x, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pentadiagonal
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["scan", "assoc"])
+@pytest.mark.parametrize("n,m", [(6, 1), (16, 7), (128, 32), (255, 3)])
+def test_penta_constant_vs_dense(method, n, m):
+    rng = np.random.default_rng(n * 100 + m)
+    a, b, c, d, e = _rand_penta(rng, n)
+    rhs = rng.normal(size=(n, m)).astype(np.float32)
+    f = penta_factor(*map(jnp.asarray, (a, b, c, d, e)))
+    x = np.asarray(penta_solve(f, jnp.asarray(rhs), method=method))
+    A = np.asarray(dense_penta(a, b, c, d, e))
+    want = np.linalg.solve(A.astype(np.float64), rhs.astype(np.float64))
+    np.testing.assert_allclose(x, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", [8, 64, 257])
+def test_periodic_penta_vs_dense(n):
+    rng = np.random.default_rng(n + 11)
+    a, b, c, d, e = _rand_penta(rng, n, dominance=5.0)
+    rhs = rng.normal(size=(n, 4)).astype(np.float32)
+    pf = periodic_penta_factor(*map(jnp.asarray, (a, b, c, d, e)))
+    x = np.asarray(periodic_penta_solve(pf, jnp.asarray(rhs)))
+    A = np.asarray(dense_penta(a, b, c, d, e, periodic=True))
+    want = np.linalg.solve(A.astype(np.float64), rhs.astype(np.float64))
+    np.testing.assert_allclose(x, want, rtol=3e-4, atol=3e-4)
+
+
+def test_penta_paper_hyperdiffusion_coefficients():
+    """Paper Eq. (20): a=e=sigma, b=d=-4 sigma, c=1+6 sigma (periodic)."""
+    n = 256
+    sigma = 0.11
+    one = np.ones(n, np.float32)
+    a = sigma * one; b = -4 * sigma * one; c = (1 + 6 * sigma) * one
+    d = -4 * sigma * one; e = sigma * one
+    rng = np.random.default_rng(5)
+    rhs = rng.normal(size=(n, 8)).astype(np.float32)
+    pf = periodic_penta_factor(*map(jnp.asarray, (a, b, c, d, e)))
+    x = np.asarray(periodic_penta_solve(pf, jnp.asarray(rhs)))
+    A = np.asarray(dense_penta(a, b, c, d, e, periodic=True))
+    want = np.linalg.solve(A.astype(np.float64), rhs.astype(np.float64))
+    np.testing.assert_allclose(x, want, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Operator API: modes agree with each other + storage claims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("periodic", [False, True])
+def test_tridiag_modes_agree(periodic):
+    rng = np.random.default_rng(42)
+    n, m = 96, 24
+    a, b, c = _rand_tridiag(rng, n)
+    d = rng.normal(size=(n, m)).astype(np.float32)
+    xs = {}
+    for mode in ["constant", "batch"]:
+        op = TridiagOperator.create(a, b, c, mode=mode, periodic=periodic,
+                                    batch=m if mode == "batch" else None)
+        xs[mode] = np.asarray(op.solve(jnp.asarray(d)))
+    np.testing.assert_allclose(xs["constant"], xs["batch"], rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("periodic", [False, True])
+def test_penta_modes_agree(periodic):
+    rng = np.random.default_rng(43)
+    n, m = 64, 12
+    # uniform coefficients so the uniform mode is exact
+    sigma = 0.21
+    coef = (sigma, -4 * sigma, 1 + 6 * sigma, -4 * sigma, sigma)
+    rhs = rng.normal(size=(n, m)).astype(np.float32)
+    xs = {}
+    for mode in ["constant", "batch", "uniform"]:
+        op = PentaOperator.create(*coef, n=n, mode=mode, periodic=periodic,
+                                  batch=m if mode == "batch" else None)
+        xs[mode] = np.asarray(op.solve(jnp.asarray(rhs)))
+    np.testing.assert_allclose(xs["constant"], xs["batch"], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(xs["constant"], xs["uniform"], rtol=2e-4, atol=2e-4)
+
+
+def test_storage_reduction_claims():
+    """Paper: tridiag 4MN -> 3N+MN (~75 %), penta 6MN -> 5N+MN (~83 %)."""
+    n, m = 1024, 4096
+    tri_c = TridiagOperator.create(1.0, 4.0, 1.0, n=n, mode="constant")
+    tri_b = TridiagOperator.create(1.0, 4.0, 1.0, n=n, mode="batch", batch=m)
+    assert tri_c.storage_bytes()["lhs_bytes"] == 3 * n * 4
+    assert tri_b.storage_bytes()["lhs_bytes"] == 3 * n * m * 4
+    # LHS + RHS totals, paper's O() comparison:
+    tot_c = tri_c.storage_bytes(rhs_batch=m)["total_bytes"]
+    tot_b = tri_b.storage_bytes(rhs_batch=m)["total_bytes"]
+    assert tot_c == (3 * n + n * m) * 4
+    assert tot_b == (4 * n * m) * 4
+    reduction = 1 - tot_c / tot_b
+    assert reduction > 0.74  # ~75 % for M >> 1
+
+    pen_c = PentaOperator.create(1.0, -4.0, 7.0, -4.0, 1.0, n=n, mode="constant")
+    pen_b = PentaOperator.create(1.0, -4.0, 7.0, -4.0, 1.0, n=n, mode="batch", batch=m)
+    pen_u = PentaOperator.create(1.0, -4.0, 7.0, -4.0, 1.0, n=n, mode="uniform")
+    tot_c = pen_c.storage_bytes(rhs_batch=m)["total_bytes"]
+    tot_b = pen_b.storage_bytes(rhs_batch=m)["total_bytes"]
+    assert tot_c == (5 * n + n * m) * 4
+    assert tot_b == (6 * n * m) * 4
+    assert 1 - tot_c / tot_b > 0.82  # ~83 %
+    assert pen_u.storage_bytes()["lhs_bytes"] == (4 * n + 1) * 4  # 4 vectors + scalar
+
+
+# ---------------------------------------------------------------------------
+# property-based: random well-conditioned systems always solve
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 200), m=st.integers(1, 8), seed=st.integers(0, 2**31 - 1),
+       periodic=st.booleans())
+def test_prop_tridiag_residual(n, m, seed, periodic):
+    rng = np.random.default_rng(seed)
+    a, b, c = _rand_tridiag(rng, n, dominance=3.0)
+    d = rng.normal(size=(n, m)).astype(np.float32)
+    if periodic:
+        pf = periodic_thomas_factor(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+        x = np.asarray(periodic_thomas_solve(pf, jnp.asarray(d)))
+    else:
+        f = thomas_factor(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+        x = np.asarray(thomas_solve(f, jnp.asarray(d)))
+    A = np.asarray(dense_tridiag(a, b, c, periodic=periodic)).astype(np.float64)
+    resid = A @ x.astype(np.float64) - d
+    assert np.max(np.abs(resid)) < 1e-3 * max(1.0, np.max(np.abs(d)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(5, 150), m=st.integers(1, 6), seed=st.integers(0, 2**31 - 1),
+       periodic=st.booleans())
+def test_prop_penta_residual(n, m, seed, periodic):
+    rng = np.random.default_rng(seed)
+    a, b, c, d, e = _rand_penta(rng, n, dominance=5.0)
+    rhs = rng.normal(size=(n, m)).astype(np.float32)
+    if periodic:
+        pf = periodic_penta_factor(*map(jnp.asarray, (a, b, c, d, e)))
+        x = np.asarray(periodic_penta_solve(pf, jnp.asarray(rhs)))
+    else:
+        f = penta_factor(*map(jnp.asarray, (a, b, c, d, e)))
+        x = np.asarray(penta_solve(f, jnp.asarray(rhs)))
+    A = np.asarray(dense_penta(a, b, c, d, e, periodic=periodic)).astype(np.float64)
+    resid = A @ x.astype(np.float64) - rhs
+    assert np.max(np.abs(resid)) < 2e-3 * max(1.0, np.max(np.abs(rhs)))

@@ -1,0 +1,197 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles, shape/dtype sweeps."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    penta_factor,
+    periodic_thomas_factor,
+    thomas_factor,
+)
+from repro.kernels import (
+    fused_cn_step,
+    penta_batch,
+    penta_constant,
+    thomas_batch,
+    thomas_constant,
+)
+from repro.kernels import ref as kref
+from repro.kernels.thomas import hbm_traffic_bytes as tri_traffic
+from repro.kernels.penta import hbm_traffic_bytes as pen_traffic
+
+
+def _tridiag(rng, n, dtype):
+    a = rng.uniform(-1, 1, n).astype(dtype)
+    c = rng.uniform(-1, 1, n).astype(dtype)
+    b = (np.abs(a) + np.abs(c) + 2.5).astype(dtype)
+    return a, b, c
+
+
+def _penta(rng, n, dtype):
+    a = rng.uniform(-1, 1, n).astype(dtype)
+    b = rng.uniform(-1, 1, n).astype(dtype)
+    d = rng.uniform(-1, 1, n).astype(dtype)
+    e = rng.uniform(-1, 1, n).astype(dtype)
+    c = (np.abs(a) + np.abs(b) + np.abs(d) + np.abs(e) + 4.0).astype(dtype)
+    return a, b, c, d, e
+
+
+TOL = {np.float32: dict(rtol=2e-5, atol=2e-5), np.float64: dict(rtol=1e-12, atol=1e-12)}
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+@pytest.mark.parametrize("n,m,block_m,unroll", [
+    (8, 128, 128, 1),
+    (64, 256, 128, 1),
+    (64, 256, 128, 4),
+    (128, 100, 64, 2),     # ragged M -> lane padding
+    (33, 512, 256, 1),     # odd N
+])
+def test_thomas_constant_kernel_vs_ref(dtype, n, m, block_m, unroll):
+    rng = np.random.default_rng(n * 7 + m)
+    a, b, c = _tridiag(rng, n, dtype)
+    d = rng.normal(size=(n, m)).astype(dtype)
+    f = thomas_factor(*map(jnp.asarray, (a, b, c)))
+    want = np.asarray(kref.thomas_constant_ref(
+        jnp.stack([f.a, f.inv_denom, f.c_hat]), jnp.asarray(d)))
+    got = np.asarray(thomas_constant(f, jnp.asarray(d), block_m=block_m,
+                                     unroll=unroll, interpret=True))
+    np.testing.assert_allclose(got, want, **TOL[dtype])
+
+
+@pytest.mark.parametrize("n,m", [(64, 256), (32, 128)])
+def test_thomas_batch_kernel_vs_ref(n, m):
+    rng = np.random.default_rng(3)
+    a, b, c = _tridiag(rng, n, np.float32)
+    ab = np.broadcast_to(a[:, None], (n, m)).copy()
+    bb = np.broadcast_to(b[:, None], (n, m)).copy()
+    cb = np.broadcast_to(c[:, None], (n, m)).copy()
+    # per-system perturbation so each lane truly has a distinct LHS
+    ab += rng.uniform(-0.1, 0.1, (n, m)).astype(np.float32)
+    d = rng.normal(size=(n, m)).astype(np.float32)
+    want = np.asarray(kref.thomas_batch_ref(*map(jnp.asarray, (ab, bb, cb, d))))
+    got = np.asarray(thomas_batch(*map(jnp.asarray, (ab, bb, cb, d)),
+                                  block_m=128, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("uniform", [False, True])
+@pytest.mark.parametrize("n,m,block_m", [(16, 128, 128), (64, 384, 128), (100, 64, 64)])
+def test_penta_constant_kernel_vs_ref(uniform, n, m, block_m):
+    rng = np.random.default_rng(n + m)
+    if uniform:
+        sigma = 0.17
+        one = np.ones(n, np.float32)
+        a, b, c, d, e = (sigma * one, -4 * sigma * one, (1 + 6 * sigma) * one,
+                         -4 * sigma * one, sigma * one)
+    else:
+        a, b, c, d, e = _penta(rng, n, np.float32)
+    rhs = rng.normal(size=(n, m)).astype(np.float32)
+    f = penta_factor(*map(jnp.asarray, (a, b, c, d, e)))
+    want = np.asarray(kref.penta_constant_ref(
+        jnp.stack([jnp.broadcast_to(f.eps, f.beta.shape), f.beta, f.inv_alpha,
+                   f.gamma, f.delta]), jnp.asarray(rhs)))
+    got = np.asarray(penta_constant(f, jnp.asarray(rhs), block_m=block_m,
+                                    interpret=True, uniform=uniform))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_penta_batch_kernel_vs_ref():
+    rng = np.random.default_rng(9)
+    n, m = 48, 256
+    a, b, c, d, e = _penta(rng, n, np.float32)
+    tile = lambda v: np.broadcast_to(v[:, None], (n, m)).copy()
+    ab, bb, cb, db, eb = map(tile, (a, b, c, d, e))
+    cb += rng.uniform(0, 0.2, (n, m)).astype(np.float32)  # distinct LHS per lane
+    rhs = rng.normal(size=(n, m)).astype(np.float32)
+    want = np.asarray(kref.penta_batch_ref(
+        *map(jnp.asarray, (ab, bb, cb, db, eb, rhs))))
+    got = np.asarray(penta_batch(*map(jnp.asarray, (ab, bb, cb, db, eb, rhs)),
+                                 interpret=True))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("n,m", [(64, 128), (128, 256)])
+def test_fused_cn_kernel_vs_ref(n, m):
+    rng = np.random.default_rng(n)
+    sigma = 0.23
+    a = -sigma * np.ones(n, np.float32)
+    b = (1 + 2 * sigma) * np.ones(n, np.float32)
+    c = -sigma * np.ones(n, np.float32)
+    pf = periodic_thomas_factor(*map(jnp.asarray, (a, b, c)))
+    field = rng.normal(size=(n, m)).astype(np.float32)
+    want = np.asarray(kref.fused_cn_tridiag_ref(pf, sigma, jnp.asarray(field)))
+    got = np.asarray(fused_cn_step(pf, sigma, jnp.asarray(field), interpret=True))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_fused_cn_multi_step_stability():
+    """100 fused CN steps of the heat equation stay bounded & decay."""
+    n, m = 64, 128
+    dx = 1.0 / n
+    dt = 0.4 * dx * dx  # sigma < 1/2 not required (CN unconditionally stable)
+    sigma = dt / (2 * dx * dx)
+    a = -sigma * np.ones(n, np.float32)
+    b = (1 + 2 * sigma) * np.ones(n, np.float32)
+    c = -sigma * np.ones(n, np.float32)
+    pf = periodic_thomas_factor(*map(jnp.asarray, (a, b, c)))
+    x = np.linspace(0, 1, n, endpoint=False)
+    field = jnp.asarray(np.tile(np.sin(2 * np.pi * x)[:, None], (1, m)).astype(np.float32))
+    e0 = float(jnp.sum(field ** 2))
+    for _ in range(100):
+        field = fused_cn_step(pf, sigma, field, interpret=True)
+    e1 = float(jnp.sum(field ** 2))
+    assert np.isfinite(e1) and e1 < e0  # diffusion dissipates energy
+
+
+def test_traffic_accounting_favors_constant():
+    """The analytic HBM traffic model behind the paper's speed-up claim."""
+    n, m = 1024, 65536
+    t = tri_traffic(n, m)
+    assert t["constant"] < t["batch"]
+    assert t["batch"] / t["constant"] == pytest.approx(5 / 2, rel=0.01)
+    p = pen_traffic(n, m)
+    assert p["batch"] / p["constant"] == pytest.approx(7 / 2, rel=0.01)
+    assert p["uniform"] < p["constant"]
+
+
+@pytest.mark.parametrize("n,m", [(64, 128), (128, 256), (96, 64)])
+def test_fused_cn_penta_kernel_vs_ref(n, m):
+    """Fused hyperdiffusion CN step == stencil + periodic penta solve."""
+    from repro.core import periodic_penta_factor, periodic_penta_solve
+    from repro.kernels import fused_cn_penta_step
+    from repro.pde.stencil import cn_rhs_hyperdiffusion
+
+    rng = np.random.default_rng(n)
+    sigma = 0.13
+    one = np.ones(n, np.float32)
+    coef = (sigma * one, -4 * sigma * one, (1 + 6 * sigma) * one,
+            -4 * sigma * one, sigma * one)
+    pf = periodic_penta_factor(*map(jnp.asarray, coef))
+    field = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    want = np.asarray(periodic_penta_solve(
+        pf, cn_rhs_hyperdiffusion(field, sigma)))
+    got = np.asarray(fused_cn_penta_step(pf, sigma, field, interpret=True))
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=5e-5)
+
+
+def test_fused_cn_penta_multi_step_decay():
+    from repro.core import periodic_penta_factor
+    from repro.kernels import fused_cn_penta_step
+    n, m = 64, 128
+    dx = 1.0 / n
+    sigma = 1e-7 / (2 * dx ** 4)
+    one = np.ones(n, np.float32)
+    pf = periodic_penta_factor(
+        jnp.asarray(sigma * one), jnp.asarray(-4 * sigma * one),
+        jnp.asarray((1 + 6 * sigma) * one), jnp.asarray(-4 * sigma * one),
+        jnp.asarray(sigma * one))
+    x = np.arange(n) / n
+    f = jnp.asarray(np.tile(np.sin(2 * np.pi * x)[:, None], (1, m)).astype(np.float32))
+    e0 = float(jnp.sum(f ** 2))
+    for _ in range(50):
+        f = fused_cn_penta_step(pf, sigma, f, interpret=True)
+    e1 = float(jnp.sum(f ** 2))
+    assert np.isfinite(e1) and e1 < e0

@@ -1,0 +1,77 @@
+"""Logical sharding resolver: divisibility fallbacks and axis-reuse guards."""
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import LogicalRules, resolve_spec
+
+
+def _mesh(shape, axes):
+    devs = np.array(jax.devices()[:1] * int(np.prod(shape))).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+RULES = LogicalRules.default()
+
+
+def test_basic_param_spec():
+    mesh = _mesh((4, 2), ("data", "model"))
+    spec = resolve_spec(("embed", "mlp"), (512, 2048), mesh, RULES)
+    assert spec == P("data", "model")
+
+
+def test_multi_axis_batch_group():
+    mesh = _mesh((2, 4, 2), ("pod", "data", "model"))
+    spec = resolve_spec(("act_batch", "act_seq", "act_embed"), (64, 128, 256),
+                        mesh, RULES)
+    assert spec == P(("pod", "data"), None, None)
+
+
+def test_missing_axis_dropped():
+    mesh = _mesh((4, 2), ("data", "model"))  # no "pod"
+    spec = resolve_spec(("act_batch", None), (64, 128), mesh, RULES)
+    assert spec == P("data", None)
+
+
+def test_indivisible_falls_back_to_replicated():
+    mesh = _mesh((2, 16), ("data", "model"))
+    # 24 heads (minitron) % 16 != 0 -> replicated
+    spec = resolve_spec(("heads", "head_dim"), (24, 128), mesh, RULES)
+    assert spec[0] is None
+    # head_dim picks up the model axis instead (fallback chain)
+    assert spec[1] == "model"
+
+
+def test_axis_not_reused_within_tensor():
+    mesh = _mesh((2, 4), ("data", "model"))
+    # experts grabs "model"; mlp candidates = ["model"] already used -> None
+    spec = resolve_spec(("experts", "embed", "expert_mlp"), (8, 512, 1024),
+                        mesh, RULES)
+    assert spec == P("model", "data", None)
+
+
+def test_kv_fallback_chain_for_decode_cache():
+    mesh = _mesh((4, 16), ("data", "model"))
+    # GQA kv=8 cache: kv fails on 16-way axis, kv_seq picks it up
+    spec = resolve_spec(("act_batch", "act_kv", "act_kv_seq", "act_head_dim"),
+                        (128, 8, 32768, 128), mesh, RULES)
+    assert spec == P("data", None, "model", None)
+    # MHA kv=16 cache: kv heads shard directly
+    spec = resolve_spec(("act_batch", "act_kv", "act_kv_seq", "act_head_dim"),
+                        (128, 16, 32768, 128), mesh, RULES)
+    assert spec == P("data", "model", None, None)
+
+
+def test_override():
+    mesh = _mesh((4, 2), ("data", "model"))
+    rules = RULES.override(act_seq=["model"])  # sequence parallelism on
+    spec = resolve_spec(("act_batch", "act_seq", "act_embed"), (32, 1024, 512),
+                        mesh, rules)
+    assert spec == P("data", "model", None)
+
+
+def test_size_one_axis_never_assigned():
+    mesh = _mesh((1, 2), ("data", "model"))
+    spec = resolve_spec(("act_batch", "act_heads"), (7, 16), mesh, RULES)
+    assert spec == P(None, "model")  # data axis of size 1 is useless; 7 % 1 irrelevant

@@ -1,0 +1,33 @@
+"""Regression: SSD gradients stay finite at realistic sequence lengths.
+
+The masked-exp overflow (EXPERIMENTS.md §Paper-validation debug note) only
+manifests when the within-chunk cumulative decay range is large — i.e. at
+real chunk sizes with trained-scale dt — so this test uses the full
+mamba2-130m chunk size and a long sequence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def test_ssd_grads_finite_long_sequence():
+    rng = np.random.default_rng(0)
+    B, S, H, P, N = 1, 512, 4, 16, 16
+    chunk = 64
+    xh = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+    # large dt values -> large |cum| range within a chunk (the failure mode)
+    dt = jnp.asarray(rng.uniform(0.5, 3.0, size=(B, S, H)).astype(np.float32))
+    A_log = jnp.zeros((H,), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+
+    def loss(xh, dt, Bm, Cm):
+        y, state = ssd_chunked(xh, dt, A_log, Bm, Cm, chunk)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + jnp.sum(state ** 2)
+
+    val, grads = jax.value_and_grad(loss, argnums=(0, 1, 2, 3))(xh, dt, Bm, Cm)
+    assert np.isfinite(float(val))
+    for g in grads:
+        assert np.isfinite(np.asarray(g, np.float32)).all()
