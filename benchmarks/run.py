@@ -6,18 +6,37 @@ the paper's Figs. 2-4 mechanism (less memory traffic per solve); the
 absolute roofline story for TPU lives in EXPERIMENTS.md §Roofline and the
 analytic kernel-traffic table (bench_kernel_traffic).
 
+Solver benchmarks route through the unified ``repro.solver`` front-end, so
+constant-vs-batch × reference-vs-pallas is one sweep (``backends`` table).
+
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig2       # one table
+    PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_solvers.json
+
+``--json`` additionally writes ``BENCH_solvers.json`` — a list of
+``{name, us_per_call, backend, n, m}`` rows — so the perf trajectory is
+machine-readable across PRs.
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+JSON_PATH = "BENCH_solvers.json"
+_ROWS: list = []   # machine-readable mirror of the printed CSV
+
+
+def _record(name: str, us_per_call: float, *, backend=None, n=None, m=None,
+            derived: str = ""):
+    print(f"{name},{us_per_call:.0f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "backend": backend, "n": n, "m": m})
 
 
 def _timeit(fn, *args, reps=3, warmup=1):
@@ -41,21 +60,22 @@ def _rhs(n, m, seed=0):
 # ---------------------------------------------------------------------------
 
 def bench_fig2_tridiag():
-    from repro.core import TridiagOperator
+    from repro.solver import BandedSystem, plan
     sigma = 0.4
     for n in (64, 256, 1024):
         for m in (64, 512, 4096):
             ops = {}
             for mode in ("constant", "batch"):
-                op = TridiagOperator.create(
+                p = plan(BandedSystem.tridiag(
                     -sigma, 1 + 2 * sigma, -sigma, n=n, mode=mode,
-                    periodic=True, batch=m if mode == "batch" else None)
+                    periodic=True, batch=m if mode == "batch" else None),
+                    backend="reference")
                 d = _rhs(n, m)
-                f = jax.jit(op.solve)
-                ops[mode] = _timeit(f, d)
+                ops[mode] = _timeit(jax.jit(p.solve), d)
             speedup = ops["batch"] / ops["constant"]
-            print(f"fig2_tridiag_N{n}_M{m},{ops['constant']:.0f},"
-                  f"speedup_vs_batch={speedup:.2f}x")
+            _record(f"fig2_tridiag_N{n}_M{m}", ops["constant"],
+                    backend="reference", n=n, m=m,
+                    derived=f"speedup_vs_batch={speedup:.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -63,20 +83,22 @@ def bench_fig2_tridiag():
 # ---------------------------------------------------------------------------
 
 def bench_fig3_penta():
-    from repro.core import PentaOperator
+    from repro.solver import BandedSystem, plan
     s = 0.11
     coef = (s, -4 * s, 1 + 6 * s, -4 * s, s)
     for n in (64, 256, 1024):
         for m in (64, 512, 4096):
             res = {}
             for mode in ("constant", "batch"):
-                op = PentaOperator.create(
+                p = plan(BandedSystem.penta(
                     *coef, n=n, mode=mode, periodic=True,
-                    batch=m if mode == "batch" else None)
+                    batch=m if mode == "batch" else None),
+                    backend="reference")
                 d = _rhs(n, m)
-                res[mode] = _timeit(jax.jit(op.solve), d)
-            print(f"fig3_penta_N{n}_M{m},{res['constant']:.0f},"
-                  f"speedup_vs_batch={res['batch']/res['constant']:.2f}x")
+                res[mode] = _timeit(jax.jit(p.solve), d)
+            _record(f"fig3_penta_N{n}_M{m}", res["constant"],
+                    backend="reference", n=n, m=m,
+                    derived=f"speedup_vs_batch={res['batch']/res['constant']:.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -84,19 +106,20 @@ def bench_fig3_penta():
 # ---------------------------------------------------------------------------
 
 def bench_fig4_uniform():
-    from repro.core import PentaOperator
+    from repro.solver import BandedSystem, plan
     s = 0.11
     coef = (s, -4 * s, 1 + 6 * s, -4 * s, s)
     for n, m in ((256, 512), (1024, 512), (256, 4096)):
         res = {}
         for mode in ("uniform", "batch"):
-            op = PentaOperator.create(
+            p = plan(BandedSystem.penta(
                 *coef, n=n, mode=mode, periodic=True,
-                batch=m if mode == "batch" else None)
+                batch=m if mode == "batch" else None), backend="reference")
             d = _rhs(n, m)
-            res[mode] = _timeit(jax.jit(op.solve), d)
-        print(f"fig4_uniform_N{n}_M{m},{res['uniform']:.0f},"
-              f"speedup_vs_batch={res['batch']/res['uniform']:.2f}x")
+            res[mode] = _timeit(jax.jit(p.solve), d)
+        _record(f"fig4_uniform_N{n}_M{m}", res["uniform"],
+                backend="reference", n=n, m=m,
+                derived=f"speedup_vs_batch={res['batch']/res['uniform']:.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -104,19 +127,20 @@ def bench_fig4_uniform():
 # ---------------------------------------------------------------------------
 
 def bench_memory_table():
-    from repro.core import PentaOperator, TridiagOperator
+    from repro.solver import BandedSystem, plan
     n, m = 1024, 65536
-    tri_c = TridiagOperator.create(1., 4., 1., n=n, mode="constant")
-    tri_b = TridiagOperator.create(1., 4., 1., n=n, mode="batch", batch=m)
-    tc = tri_c.storage_bytes(rhs_batch=m)["total_bytes"]
-    tb = tri_b.storage_bytes(rhs_batch=m)["total_bytes"]
+
+    def total(system):
+        return plan(system, backend="reference").storage_bytes(
+            rhs_batch=m)["total_bytes"]
+
+    tc = total(BandedSystem.tridiag(1., 4., 1., n=n, mode="constant"))
+    tb = total(BandedSystem.tridiag(1., 4., 1., n=n, mode="batch", batch=m))
     print(f"mem_tridiag_N{n}_M{m},0,reduction={100*(1-tc/tb):.1f}%_paper75%")
-    pen_c = PentaOperator.create(1., -4., 7., -4., 1., n=n, mode="constant")
-    pen_b = PentaOperator.create(1., -4., 7., -4., 1., n=n, mode="batch", batch=m)
-    pen_u = PentaOperator.create(1., -4., 7., -4., 1., n=n, mode="uniform")
-    pc = pen_c.storage_bytes(rhs_batch=m)["total_bytes"]
-    pb = pen_b.storage_bytes(rhs_batch=m)["total_bytes"]
-    pu = pen_u.storage_bytes(rhs_batch=m)["total_bytes"]
+    pen = (1., -4., 7., -4., 1.)
+    pc = total(BandedSystem.penta(*pen, n=n, mode="constant"))
+    pb = total(BandedSystem.penta(*pen, n=n, mode="batch", batch=m))
+    pu = total(BandedSystem.penta(*pen, n=n, mode="uniform"))
     print(f"mem_penta_N{n}_M{m},0,reduction={100*(1-pc/pb):.1f}%_paper83%")
     print(f"mem_penta_uniform_N{n}_M{m},0,reduction={100*(1-pu/pb):.1f}%")
 
@@ -165,7 +189,38 @@ def bench_pallas_kernels():
     f = thomas_factor(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
     d = _rhs(n, m)
     t = _timeit(lambda dd: thomas_constant(f, dd), d, reps=2)
-    print(f"pallas_thomas_constant_interp_N{n}_M{m},{t:.0f},interpret_mode")
+    _record(f"pallas_thomas_constant_interp_N{n}_M{m}", t, backend="pallas",
+            n=n, m=m, derived="interpret_mode")
+
+
+# ---------------------------------------------------------------------------
+# Backend axis: constant-vs-batch x reference-vs-pallas through repro.solver
+# ---------------------------------------------------------------------------
+
+def bench_backends():
+    """One sweep over the repro.solver registry: the benchmark surface later
+    PRs extend when they plug new backends in. (Pallas rows are interpret
+    mode off-TPU — compare trends, not absolutes.)"""
+    from repro.solver import BandedSystem, plan
+    sigma = 0.4
+    n, m = 256, 512
+    d = _rhs(n, m)
+    for mode in ("constant", "batch"):
+        for backend in ("reference", "pallas"):
+            p = plan(BandedSystem.tridiag(
+                -sigma, 1 + 2 * sigma, -sigma, n=n, mode=mode,
+                batch=m if mode == "batch" else None), backend=backend)
+            t = _timeit(jax.jit(p.solve), d, reps=2)
+            _record(f"solver_tridiag_{mode}_{backend}_N{n}_M{m}", t,
+                    backend=backend, n=n, m=m, derived=f"mode={mode}")
+    s = 0.11
+    for backend in ("reference", "pallas"):
+        p = plan(BandedSystem.penta(
+            s, -4 * s, 1 + 6 * s, -4 * s, s, n=n, mode="constant"),
+            backend=backend)
+        t = _timeit(jax.jit(p.solve), d, reps=2)
+        _record(f"solver_penta_constant_{backend}_N{n}_M{m}", t,
+                backend=backend, n=n, m=m, derived="mode=constant")
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +253,7 @@ TABLES = {
     "fig2": bench_fig2_tridiag,
     "fig3": bench_fig3_penta,
     "fig4": bench_fig4_uniform,
+    "backends": bench_backends,
     "memory": bench_memory_table,
     "traffic": bench_kernel_traffic,
     "pallas": bench_pallas_kernels,
@@ -206,10 +262,19 @@ TABLES = {
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(TABLES)
+    argv = sys.argv[1:]
+    write_json = "--json" in argv
+    which = [a for a in argv if not a.startswith("--")]
+    if not which:
+        # --json alone: the solver tables that carry (backend, n, m) rows.
+        which = ["backends"] if write_json else list(TABLES)
     print("name,us_per_call,derived")
     for k in which:
         TABLES[k]()
+    if write_json:
+        with open(JSON_PATH, "w") as fh:
+            json.dump(_ROWS, fh, indent=2)
+        print(f"# wrote {len(_ROWS)} rows to {JSON_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,16 @@
-"""Quickstart: the paper's contribution in 40 lines.
+"""Quickstart: the paper's contribution through the repro.solver front-end.
 
 Solve 10,000 periodic tridiagonal systems that share one LHS (the batch-1D-
-PDE setting), compare the constant-LHS storage/solve against the per-system
-baseline (cuThomasBatch-equivalent), and run the same thing through the
-Pallas TPU kernel (interpret mode on CPU).
+PDE setting).  ONE API — ``plan(BandedSystem..., backend=...).solve(rhs)`` —
+retargets the same solve across the backend registry:
+
+  * ``reference`` — pure-JAX scan sweeps (the portable oracle),
+  * ``pallas``    — the interleaved TPU kernels (interpret mode on CPU),
+  * ``sharded``   — systems sharded over a device mesh, LHS replicated,
+  * ``auto``      — pallas when the working set fits VMEM, else reference.
+
+``mode="constant"`` vs ``mode="batch"`` is the paper's storage comparison
+(cuThomasConstantBatch vs cuThomasBatch).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,29 +18,39 @@ Pallas TPU kernel (interpret mode on CPU).
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import TridiagOperator, PentaOperator
-from repro.core import periodic_thomas_factor
-from repro.kernels import thomas_constant
+from repro.solver import BandedSystem, available_backends, plan
 
 N, M = 512, 10_000
 sigma = 0.4
 
-# --- the paper's setting: one LHS (CN diffusion matrix), M interleaved RHS --
 rng = np.random.default_rng(0)
 rhs = jnp.asarray(rng.normal(size=(N, M)).astype(np.float32))
 
-const_op = TridiagOperator.create(-sigma, 1 + 2 * sigma, -sigma, n=N,
-                                  mode="constant", periodic=True)
-batch_op = TridiagOperator.create(-sigma, 1 + 2 * sigma, -sigma, n=N,
-                                  mode="batch", periodic=True, batch=M)
+# --- one spec, every backend ------------------------------------------------
+system = BandedSystem.tridiag(-sigma, 1 + 2 * sigma, -sigma, n=N,
+                              periodic=True, mode="constant")
+print("registered backends:", available_backends())
 
-x_const = const_op.solve(rhs)
-x_batch = batch_op.solve(rhs)
+p_ref = plan(system, backend="reference")
+x_ref = p_ref.solve(rhs)
+
+p_auto = plan(system, backend="auto")
+print(f"backend='auto' resolved to: {p_auto.backend} "
+      f"(block_m={getattr(p_auto.impl, 'block_m', 'n/a')})")
+x_auto = p_auto.solve(rhs[:, :256])          # interpret mode: keep it small
+print("auto vs reference max |dx|:",
+      float(jnp.max(jnp.abs(x_auto - x_ref[:, :256]))))
+
+# --- the paper's storage claim: constant vs per-system LHS ------------------
+batch_sys = BandedSystem.tridiag(-sigma, 1 + 2 * sigma, -sigma, n=N,
+                                 periodic=True, mode="batch", batch=M)
+p_batch = plan(batch_sys, backend="reference")
+x_batch = p_batch.solve(rhs)
 print("constant vs per-system max |dx|:",
-      float(jnp.max(jnp.abs(x_const - x_batch))))
+      float(jnp.max(jnp.abs(x_ref - x_batch))))
 
-sc = const_op.storage_bytes(rhs_batch=M)
-sb = batch_op.storage_bytes(rhs_batch=M)
+sc = p_ref.storage_bytes(rhs_batch=M)
+sb = p_batch.storage_bytes(rhs_batch=M)
 print(f"LHS storage:  constant {sc['lhs_bytes']/2**10:.1f} KiB   "
       f"batch {sb['lhs_bytes']/2**20:.1f} MiB")
 print(f"total (LHS+RHS): {sc['total_bytes']/2**20:.1f} MiB vs "
@@ -42,22 +59,17 @@ print(f"total (LHS+RHS): {sc['total_bytes']/2**20:.1f} MiB vs "
       f"(paper: ~75%)")
 
 # --- pentadiagonal (hyperdiffusion LHS), incl. the uniform variant ----------
-pen_c = PentaOperator.create(sigma, -4*sigma, 1+6*sigma, -4*sigma, sigma,
-                             n=N, mode="constant", periodic=True)
-pen_b = PentaOperator.create(sigma, -4*sigma, 1+6*sigma, -4*sigma, sigma,
-                             n=N, mode="batch", periodic=True, batch=M)
-pc = pen_c.storage_bytes(rhs_batch=M)["total_bytes"]
-pb = pen_b.storage_bytes(rhs_batch=M)["total_bytes"]
+pen = (sigma, -4 * sigma, 1 + 6 * sigma, -4 * sigma, sigma)
+pc = plan(BandedSystem.penta(*pen, n=N, periodic=True, mode="constant"),
+          backend="reference").storage_bytes(rhs_batch=M)["total_bytes"]
+pb = plan(BandedSystem.penta(*pen, n=N, periodic=True, mode="batch", batch=M),
+          backend="reference").storage_bytes(rhs_batch=M)["total_bytes"]
 print(f"penta total: {pc/2**20:.1f} MiB vs {pb/2**20:.1f} MiB "
       f"-> {100*(1-pc/pb):.1f}% saved (paper: ~83%)")
 
-# --- the Pallas TPU kernel (interpret=True on CPU) ---------------------------
-pf = periodic_thomas_factor(jnp.full((N,), -sigma),
-                            jnp.full((N,), 1 + 2 * sigma),
-                            jnp.full((N,), -sigma))
-y = thomas_constant(pf.factor, rhs[:, :256])
-corr = (y[0] + pf.v_last * y[-1]) * pf.inv_denom_sm
-x_kernel = y - corr * pf.z[:, None]
-print("Pallas kernel vs core max |dx|:",
-      float(jnp.max(jnp.abs(x_kernel - x_const[:, :256]))))
+# --- the sharded backend: LHS replicated per device, systems sharded --------
+p_sh = plan(system, backend="sharded")
+x_sh = p_sh.solve(rhs)
+print(f"sharded ({p_sh.impl.n_shards} shard(s)) vs reference max |dx|:",
+      float(jnp.max(jnp.abs(x_sh - x_ref))))
 print("OK")

@@ -2,6 +2,12 @@
 
 Gloster, Carroll, Bustamante, Ó Náraigh — "Efficient Interleaved Batch Matrix
 Solvers for CUDA" (2019). See DESIGN.md for the CUDA→TPU adaptation.
+
+These are the low-level factor/solve pairs.  The canonical public entry
+point is ``repro.solver`` (DESIGN.md §5): build a ``BandedSystem`` and call
+``plan(system, backend=...)`` — the ``reference`` backend dispatches to the
+functions in this package.  ``TridiagOperator`` / ``PentaOperator`` are
+deprecated shims over that front-end.
 """
 
 from .banded import PentaOperator, TridiagOperator

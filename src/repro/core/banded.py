@@ -1,13 +1,20 @@
-"""Operator-level API over the tridiagonal / pentadiagonal solvers.
+"""DEPRECATED operator-level API — thin shims over ``repro.solver``.
 
-Three storage modes, mirroring the paper's comparison matrix:
+``TridiagOperator`` / ``PentaOperator`` predate the unified front-end and
+are kept for one release with their original call signatures.  New code
+should use::
+
+    from repro.solver import BandedSystem, plan
+    p = plan(BandedSystem.tridiag(a, b, c, n=n, mode="constant"), backend="auto")
+    x = p.solve(rhs)
+
+The three storage modes mirror the paper's comparison matrix:
 
   * ``constant`` — ONE shared LHS for the whole batch (the paper's
     contribution: cuThomasConstantBatch / cuPentConstantBatch).
     Storage O(k·N + M·N), k = 3 (tridiag) or 5 (penta).
-  * ``batch``    — per-system LHS copies, factor fused into every solve and
-    the factored arrays conceptually overwritten (cuThomasBatch / cuPentBatch,
-    the prior state of the art the paper benchmarks against).
+  * ``batch``    — per-system LHS copies, factor fused into every solve
+    (cuThomasBatch / cuPentBatch, the prior state of the art).
     Storage O((k+1)·M·N), k+1 = 4 or 6.
   * ``uniform``  — all entries of each diagonal equal (cuPentUniformBatch):
     the eps/a vector degenerates to a scalar. Storage O((k-1)·N + M·N).
@@ -20,23 +27,17 @@ quoted.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import penta as _penta
-from . import tridiag as _tridiag
-
 Array = jax.Array
 
-
-def _as_vec(x, n: int, dtype) -> jax.Array:
-    x = jnp.asarray(x, dtype=dtype)
-    if x.ndim == 0:
-        return jnp.full((n,), x, dtype=dtype)
-    return x
+_DEPRECATION = ("%s is deprecated; use repro.solver.plan(BandedSystem.%s(...))"
+                " — the operators remain for one release as shims.")
 
 
 def _nbytes(tree: Any) -> int:
@@ -44,9 +45,17 @@ def _nbytes(tree: Any) -> int:
                    for l in jax.tree_util.tree_leaves(tree)))
 
 
+def _solver():
+    # lazy: repro.solver imports repro.core, so a module-level import here
+    # would be circular.
+    from repro import solver
+    return solver
+
+
 @dataclasses.dataclass(frozen=True)
 class TridiagOperator:
-    """Batched tridiagonal solve with selectable storage mode."""
+    """Batched tridiagonal solve with selectable storage mode (deprecated
+    shim over ``repro.solver``)."""
 
     mode: str                  # constant | batch | uniform
     periodic: bool
@@ -57,62 +66,27 @@ class TridiagOperator:
     def create(cls, a, b, c, *, n: int | None = None, mode: str = "constant",
                periodic: bool = False, batch: int | None = None,
                dtype=jnp.float32, method: str = "scan") -> "TridiagOperator":
-        if n is None:
-            n = jnp.asarray(b).shape[0]
-        a = _as_vec(a, n, dtype); b = _as_vec(b, n, dtype); c = _as_vec(c, n, dtype)
-
-        if mode == "batch":
-            if batch is None:
-                raise ValueError("batch mode requires batch=M (per-system LHS copies)")
-            # the baseline materialises one LHS copy per system (interleaved):
-            tile = lambda v: jnp.broadcast_to(v[:, None], (n, batch)) + jnp.zeros((n, batch), dtype)
-            stored = dict(a=tile(a), b=tile(b), c=tile(c))
-            return cls(mode=mode, periodic=periodic, n=n, stored=stored)
-
-        if mode in ("constant", "uniform"):
-            if periodic:
-                f = _tridiag.periodic_thomas_factor(a, b, c, method=method)
-            else:
-                f = _tridiag.thomas_factor(a, b, c, method=method)
-            if mode == "uniform":
-                # all-equal diagonals: the `a` vector inside the factor is a
-                # scalar broadcast — store it as 0-d (O(2N) factor storage).
-                if periodic:
-                    inner = f.factor._replace(a=f.factor.a[1])
-                    f = f._replace(factor=inner)
-                else:
-                    f = f._replace(a=f.a[1])
-            return cls(mode=mode, periodic=periodic, n=n, stored=f)
-
-        raise ValueError(f"unknown mode {mode!r}")
+        warnings.warn(_DEPRECATION % ("TridiagOperator", "tridiag"),
+                      DeprecationWarning, stacklevel=2)
+        solver = _solver()
+        system = solver.BandedSystem.tridiag(
+            a, b, c, n=n, mode=mode, periodic=periodic, batch=batch,
+            dtype=dtype)
+        p = solver.plan(system, backend="reference", method=method)
+        return cls(mode=mode, periodic=periodic, n=system.n,
+                   stored=p.impl.stored)
 
     def _factor_for_solve(self):
-        f = self.stored
+        from repro.solver import reference as _ref
         if self.mode == "uniform":
-            if self.periodic:
-                inner = f.factor
-                a = jnp.full((self.n,), inner.a, inner.inv_denom.dtype).at[0].set(0)
-                return f._replace(factor=inner._replace(a=a))
-            a = jnp.full((self.n,), f.a, f.inv_denom.dtype).at[0].set(0)
-            return f._replace(a=a)
-        return f
+            return _ref.expand_uniform(3, self.periodic, self.n, self.stored)
+        return self.stored
 
     def solve(self, d: Array, *, method: str = "scan", unroll: int = 1) -> Array:
         """d: (N,) or (N, M) interleaved RHS batch."""
-        if self.mode == "batch":
-            s = self.stored
-            if self.periodic:
-                def one(a, b, c, d1):
-                    pf = _tridiag.periodic_thomas_factor(a, b, c, method=method)
-                    return _tridiag.periodic_thomas_solve(pf, d1, method=method)
-                return jax.vmap(one, in_axes=1, out_axes=1)(s["a"], s["b"], s["c"], d)
-            # cuThomasBatch semantics: factor fused into the solve, every call.
-            return _tridiag.thomas_factor_solve(s["a"], s["b"], s["c"], d, method=method)
-
-        f = self._factor_for_solve()
-        if self.periodic:
-            return _tridiag.periodic_thomas_solve(f, d, method=method, unroll=unroll)
-        return _tridiag.thomas_solve(f, d, method=method, unroll=unroll)
+        from repro.solver import reference as _ref
+        return _ref.solve_stored(3, self.mode, self.periodic, self.n,
+                                 self.stored, d, method=method, unroll=unroll)
 
     def storage_bytes(self, *, rhs_batch: int | None = None, itemsize: int = 4) -> dict:
         lhs = _nbytes(self.stored)
@@ -125,6 +99,8 @@ class TridiagOperator:
 
 @dataclasses.dataclass(frozen=True)
 class PentaOperator:
+    """Batched pentadiagonal solve (deprecated shim over ``repro.solver``)."""
+
     mode: str
     periodic: bool
     n: int
@@ -134,61 +110,27 @@ class PentaOperator:
     def create(cls, a, b, c, d, e, *, n: int | None = None, mode: str = "constant",
                periodic: bool = False, batch: int | None = None,
                dtype=jnp.float32) -> "PentaOperator":
-        if n is None:
-            n = jnp.asarray(c).shape[0]
-        a = _as_vec(a, n, dtype); b = _as_vec(b, n, dtype); c = _as_vec(c, n, dtype)
-        d = _as_vec(d, n, dtype); e = _as_vec(e, n, dtype)
-
-        if mode == "batch":
-            if batch is None:
-                raise ValueError("batch mode requires batch=M")
-            tile = lambda v: jnp.broadcast_to(v[:, None], (n, batch)) + jnp.zeros((n, batch), dtype)
-            stored = dict(a=tile(a), b=tile(b), c=tile(c), d=tile(d), e=tile(e))
-            return cls(mode=mode, periodic=periodic, n=n, stored=stored)
-
-        if mode in ("constant", "uniform"):
-            if periodic:
-                f = _penta.periodic_penta_factor(a, b, c, d, e)
-            else:
-                f = _penta.penta_factor(a, b, c, d, e)
-            if mode == "uniform":
-                # cuPentUniformBatch: drop the eps (= a) vector -> scalar.
-                if periodic:
-                    f = f._replace(factor=f.factor._replace(eps=f.factor.eps[2]))
-                else:
-                    f = f._replace(eps=f.eps[2])
-            return cls(mode=mode, periodic=periodic, n=n, stored=f)
-
-        raise ValueError(f"unknown mode {mode!r}")
+        warnings.warn(_DEPRECATION % ("PentaOperator", "penta"),
+                      DeprecationWarning, stacklevel=2)
+        solver = _solver()
+        system = solver.BandedSystem.penta(
+            a, b, c, d, e, n=n, mode=mode, periodic=periodic, batch=batch,
+            dtype=dtype)
+        p = solver.plan(system, backend="reference")
+        return cls(mode=mode, periodic=periodic, n=system.n,
+                   stored=p.impl.stored)
 
     def _factor_for_solve(self):
-        f = self.stored
+        from repro.solver import reference as _ref
         if self.mode == "uniform":
-            def fix(inner):
-                eps = jnp.full((self.n,), inner.eps, inner.beta.dtype)
-                eps = eps.at[jnp.array([0, 1])].set(0)
-                return inner._replace(eps=eps)
-            if self.periodic:
-                return f._replace(factor=fix(f.factor))
-            return fix(f)
-        return f
+            return _ref.expand_uniform(5, self.periodic, self.n, self.stored)
+        return self.stored
 
     def solve(self, rhs: Array, *, method: str = "scan", unroll: int = 1) -> Array:
-        if self.mode == "batch":
-            s = self.stored
-            if self.periodic:
-                def one(a, b, c, d, e, r):
-                    pf = _penta.periodic_penta_factor(a, b, c, d, e)
-                    return _penta.periodic_penta_solve(pf, r, method=method)
-                return jax.vmap(one, in_axes=1, out_axes=1)(
-                    s["a"], s["b"], s["c"], s["d"], s["e"], rhs)
-            return _penta.penta_factor_solve(
-                s["a"], s["b"], s["c"], s["d"], s["e"], rhs, method=method)
-
-        f = self._factor_for_solve()
-        if self.periodic:
-            return _penta.periodic_penta_solve(f, rhs, method=method, unroll=unroll)
-        return _penta.penta_solve(f, rhs, method=method, unroll=unroll)
+        from repro.solver import reference as _ref
+        return _ref.solve_stored(5, self.mode, self.periodic, self.n,
+                                 self.stored, rhs, method=method,
+                                 unroll=unroll)
 
     def storage_bytes(self, *, rhs_batch: int | None = None, itemsize: int = 4) -> dict:
         lhs = _nbytes(self.stored)

@@ -2,6 +2,11 @@
 
 Validated in ``interpret=True`` mode on CPU (this container); compiled for
 TPU in production. See DESIGN.md §2 for the CUDA→TPU layout mapping.
+
+These are raw kernel entry points.  The canonical way to reach them is the
+``pallas`` backend of ``repro.solver`` (DESIGN.md §5), which adds factor
+construction, periodic corner corrections, and VMEM-aware ``block_m``
+auto-tuning on top: ``plan(system, backend="pallas").solve(rhs)``.
 """
 
 from .ops import (

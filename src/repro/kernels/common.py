@@ -54,8 +54,10 @@ def vmem_working_set(n: int, block_m: int, n_rhs_blocks: int, n_lhs_vecs: int,
     return (n_rhs_blocks * n * block_m + n_lhs_vecs * n) * itemsize
 
 
-def check_vmem(n: int, block_m: int, n_rhs_blocks: int, n_lhs_vecs: int) -> None:
-    ws = vmem_working_set(n, block_m, n_rhs_blocks, n_lhs_vecs)
+def check_vmem(n: int, block_m: int, n_rhs_blocks: int, n_lhs_vecs: int,
+               itemsize: int = 4) -> None:
+    ws = vmem_working_set(n, block_m, n_rhs_blocks, n_lhs_vecs,
+                          itemsize=itemsize)
     if ws > VMEM_BUDGET_BYTES:
         raise ValueError(
             f"solver working set {ws/2**20:.1f} MiB exceeds VMEM budget "

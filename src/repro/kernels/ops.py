@@ -45,7 +45,8 @@ def thomas_constant(f: TridiagFactor, d: jax.Array, *, block_m: int = 128,
     if interpret is None:
         interpret = default_interpret()
     n = d.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=3)
+    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=3,
+               itemsize=d.dtype.itemsize)
     d_pad, m = pad_lanes(d, block_m)
     x = thomas_constant_pallas(stack_tridiag_lhs(f), d_pad, block_m=block_m,
                                unroll=unroll, interpret=interpret)
@@ -58,7 +59,8 @@ def thomas_batch(a, b, c, d, *, block_m: int = 128, unroll: int = 1,
     if interpret is None:
         interpret = default_interpret()
     n = d.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=6, n_lhs_vecs=0)  # 3 diag + rhs + out + scratch
+    check_vmem(n, block_m, n_rhs_blocks=6, n_lhs_vecs=0,
+               itemsize=d.dtype.itemsize)  # 3 diag + rhs + out + scratch
     m = d.shape[1]
     args = [pad_lanes(x, block_m)[0] for x in (a, b, c, d)]
     x = thomas_batch_pallas(*args, block_m=block_m, unroll=unroll,
@@ -74,7 +76,8 @@ def penta_constant(f: PentaFactor, rhs: jax.Array, *, block_m: int = 128,
     if interpret is None:
         interpret = default_interpret()
     n = rhs.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=5)
+    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=5,
+               itemsize=rhs.dtype.itemsize)
     rhs_pad, m = pad_lanes(rhs, block_m)
     ueps = float(f.eps[2]) if uniform else None
     x = penta_constant_pallas(stack_penta_lhs(f, uniform=uniform), rhs_pad,
@@ -88,7 +91,8 @@ def penta_batch(a, b, c, d, e, rhs, *, block_m: int = 128, unroll: int = 1,
     if interpret is None:
         interpret = default_interpret()
     n = rhs.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=9, n_lhs_vecs=0)
+    check_vmem(n, block_m, n_rhs_blocks=9, n_lhs_vecs=0,
+               itemsize=rhs.dtype.itemsize)
     m = rhs.shape[1]
     args = [pad_lanes(x, block_m)[0] for x in (a, b, c, d, e, rhs)]
     x = penta_batch_pallas(*args, block_m=block_m, unroll=unroll,
@@ -103,7 +107,8 @@ def fused_cn_step(pf: PeriodicTridiagFactor, sigma: float, c: jax.Array, *,
     if interpret is None:
         interpret = default_interpret()
     n = c.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=4)
+    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=4,
+               itemsize=c.dtype.itemsize)
     lhs = stack_tridiag_lhs(pf.factor)
     z = pf.z.reshape(n, 1)
     params = jnp.zeros((1, 8), c.dtype)
@@ -124,7 +129,8 @@ def fused_cn_penta_step(pf: PeriodicPentaFactor, sigma: float, c: jax.Array,
     if interpret is None:
         interpret = default_interpret()
     n = c.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=10)
+    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=10,
+               itemsize=c.dtype.itemsize)
     lhs = stack_penta_lhs(pf.factor)
     params = jnp.zeros((1, 16), c.dtype)
     stencil = [-sigma, 4 * sigma, 1 - 6 * sigma, 4 * sigma, -sigma]

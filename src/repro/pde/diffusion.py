@@ -6,11 +6,17 @@ Implicit LHS (Eq. 11): a_i = -sigma, b_i = 1+2 sigma, c_i = -sigma with
 sigma = dt / (2 dx^2); the LHS is IDENTICAL for every system in the batch —
 exactly the paper's single-LHS setting.
 
-Three execution paths (all bit-compatible within fp tolerance):
-  * ``backend="core"``   — pure-JAX stencil + periodic Thomas (reference).
-  * ``backend="pallas"`` — stencil + cuThomasConstantBatch Pallas kernel,
-    periodic correction applied outside (paper-faithful 2-kernel pipeline).
-  * ``backend="fused"``  — single fused Pallas kernel (beyond-paper).
+Solves route through the unified ``repro.solver`` front-end, so flipping
+backends is one argument (all bit-compatible within fp tolerance):
+
+  * ``backend="reference"`` (alias ``"core"``) — pure-JAX scan solver.
+  * ``backend="pallas"``   — cuThomasConstantBatch Pallas kernel, periodic
+    correction applied outside (paper-faithful 2-kernel pipeline).
+  * ``backend="sharded"``  — systems sharded over a device mesh.
+  * ``backend="auto"``     — pallas when the working set fits VMEM, else
+    reference.
+  * ``backend="fused"``    — single fused Pallas kernel (beyond-paper; not
+    a registry backend, kept as the fused-step special case).
 """
 
 from __future__ import annotations
@@ -21,11 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    periodic_thomas_factor,
-    periodic_thomas_solve,
-)
-from repro.kernels import fused_cn_step, thomas_constant
+from repro.core import periodic_thomas_factor
+from repro.kernels import fused_cn_step
+from repro.solver import BandedSystem, plan
 from .stencil import cn_rhs_diffusion
 
 
@@ -33,7 +37,7 @@ from .stencil import cn_rhs_diffusion
 class DiffusionCN:
     n: int
     dt: float
-    backend: str = "core"
+    backend: str = "reference"   # reference|core | pallas | sharded | auto | fused
     dtype: object = jnp.float32
 
     @property
@@ -44,6 +48,11 @@ class DiffusionCN:
     def sigma(self) -> float:
         return self.dt / (2.0 * self.dx * self.dx)
 
+    def system(self) -> BandedSystem:
+        s = self.sigma
+        return BandedSystem.tridiag(-s, 1.0 + 2.0 * s, -s, n=self.n,
+                                    periodic=True, dtype=self.dtype)
+
     def factor(self):
         s = self.sigma
         a = jnp.full((self.n,), -s, self.dtype)
@@ -52,30 +61,26 @@ class DiffusionCN:
         return periodic_thomas_factor(a, b, c)
 
     def step_fn(self):
-        """Returns (pf, step) where step(field (N, M)) -> next field."""
-        pf = self.factor()
+        """Returns (plan_or_factor, step) where step(field (N, M)) -> next."""
         s = self.sigma
 
-        if self.backend == "core":
-            def step(field):
-                return periodic_thomas_solve(pf, cn_rhs_diffusion(field, s))
-        elif self.backend == "pallas":
-            def step(field):
-                rhs = cn_rhs_diffusion(field, s)
-                y = thomas_constant(pf.factor, rhs)
-                v_dot_y = y[0] + pf.v_last * y[-1]
-                return y - (v_dot_y * pf.inv_denom_sm) * pf.z[:, None]
-        elif self.backend == "fused":
+        if self.backend == "fused":
+            pf = self.factor()
+
             def step(field):
                 return fused_cn_step(pf, s, field)
-        else:
-            raise ValueError(f"unknown backend {self.backend!r}")
-        return pf, step
+            return pf, step
+
+        p = plan(self.system(), backend=self.backend)
+
+        def step(field):
+            return p.solve(cn_rhs_diffusion(field, s))
+        return p, step
 
     def run(self, field0: jax.Array, n_steps: int, *, use_scan: bool = True):
         """Integrate n_steps. field0: (N, M)."""
         _, step = self.step_fn()
-        if use_scan and self.backend == "core":
+        if use_scan and self.backend in ("core", "reference"):
             def body(f, _):
                 return step(f), None
             out, _ = jax.lax.scan(body, field0, None, length=n_steps)

@@ -6,6 +6,12 @@ Implicit LHS (Eq. 20a): a_i = e_i = sigma, b_i = d_i = -4 sigma,
 c_i = 1 + 6 sigma with sigma = dt / (2 dx^4) — a *uniform* pentadiagonal
 operator, so all three paper variants apply (cuPentBatch baseline,
 cuPentConstantBatch, cuPentUniformBatch).
+
+Solves route through ``repro.solver``: ``backend`` is any registry name
+(``reference`` — alias ``core`` —, ``pallas``, ``sharded``) or ``auto``;
+``mode`` selects the paper's storage variant (``constant`` | ``uniform`` |
+``batch``).  The pallas path applies the rank-4 Woodbury corner correction
+outside the kernel, inside the plan.
 """
 
 from __future__ import annotations
@@ -16,8 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PentaOperator
-from repro.kernels import penta_constant
+from repro.solver import BandedSystem, plan
 from .stencil import cn_rhs_hyperdiffusion
 
 
@@ -25,7 +30,7 @@ from .stencil import cn_rhs_hyperdiffusion
 class HyperdiffusionCN:
     n: int
     dt: float
-    backend: str = "core"       # core | pallas
+    backend: str = "reference"  # reference|core | pallas | sharded | auto
     mode: str = "constant"      # constant | uniform | batch (baseline)
     batch: int | None = None    # required for mode="batch"
     dtype: object = jnp.float32
@@ -42,38 +47,23 @@ class HyperdiffusionCN:
         s = self.sigma
         return (s, -4.0 * s, 1.0 + 6.0 * s, -4.0 * s, s)
 
-    def operator(self) -> PentaOperator:
-        return PentaOperator.create(*self.coefficients(), n=self.n,
-                                    mode=self.mode, periodic=True,
-                                    batch=self.batch, dtype=self.dtype)
+    def system(self) -> BandedSystem:
+        return BandedSystem.penta(*self.coefficients(), n=self.n,
+                                  periodic=True, mode=self.mode,
+                                  batch=self.batch, dtype=self.dtype)
 
     def step_fn(self):
-        op = self.operator()
+        """Returns (plan, step)."""
+        p = plan(self.system(), backend=self.backend)
         s = self.sigma
 
-        if self.backend == "core":
-            def step(field):
-                return op.solve(cn_rhs_hyperdiffusion(field, s))
-        elif self.backend == "pallas":
-            if self.mode == "batch":
-                raise ValueError("pallas backend benchmarks use constant/uniform")
-            pf = op._factor_for_solve()  # PeriodicPentaFactor
-            inner, Z, Minv, vcoef = pf.factor, pf.Z, pf.Minv, pf.vcoef
-
-            def step(field):
-                rhs = cn_rhs_hyperdiffusion(field, s)
-                y = penta_constant(inner, rhs, uniform=(self.mode == "uniform"))
-                # rank-4 Woodbury correction (cheap: 4xM dots)
-                from repro.core.penta import _vty
-                w = Minv @ _vty(vcoef, y)
-                return y - jnp.tensordot(Z, w, axes=([1], [0]))
-        else:
-            raise ValueError(f"unknown backend {self.backend!r}")
-        return op, step
+        def step(field):
+            return p.solve(cn_rhs_hyperdiffusion(field, s))
+        return p, step
 
     def run(self, field0: jax.Array, n_steps: int, *, use_scan: bool = True):
         _, step = self.step_fn()
-        if use_scan and self.backend == "core":
+        if use_scan and self.backend in ("core", "reference"):
             out, _ = jax.lax.scan(lambda f, _: (step(f), None), field0,
                                   None, length=n_steps)
             return out

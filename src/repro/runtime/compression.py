@@ -60,7 +60,8 @@ def make_compressed_mean(mesh: Mesh, axis: str):
                 treedef.unflatten([o[1] for o in out]))
 
     def mean_c(stacked_tree, err_tree):
-        fn = jax.shard_map(
+        from jax.experimental.shard_map import shard_map
+        fn = shard_map(
             local, mesh=mesh,
             in_specs=(P(axis), P(axis)), out_specs=(P(axis), P(axis)))
         return fn(stacked_tree, err_tree)

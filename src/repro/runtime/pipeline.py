@@ -60,10 +60,11 @@ def pipeline_run(mesh: Mesh, axis: str, stage_fn, stage_params, x_mb):
         outs = jnp.where(idx == K - 1, outs, jnp.zeros_like(outs))
         return jax.lax.psum(outs, axis)
 
-    fn = jax.shard_map(
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P(),
-        check_vma=False)
+        check_rep=False)
     return fn(stage_params, x_mb)
 
 

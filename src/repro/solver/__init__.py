@@ -1,0 +1,47 @@
+"""repro.solver — the single public entry point for all banded solves.
+
+The paper's contribution is a storage/layout policy (one shared LHS, an
+interleaved ``(N, M)`` RHS batch).  This package exposes that policy through
+ONE front-end, retargetable across execution backends:
+
+    from repro.solver import BandedSystem, plan
+
+    system = BandedSystem.tridiag(-s, 1 + 2 * s, -s, n=512, periodic=True)
+    p = plan(system, backend="auto")     # reference | pallas | sharded | auto
+    x = p.solve(rhs)                     # rhs: (N,) or (N, M) interleaved
+
+Backends live in a registry (see ``registry.register_backend``):
+
+  * ``reference`` — pure-JAX ``lax.scan`` sweeps from ``repro.core``
+    (CPU/GPU/TPU portable oracle).
+  * ``pallas``    — the interleaved Pallas TPU kernels from
+    ``repro.kernels`` with VMEM-aware ``block_m`` auto-tuning
+    (``interpret=True`` automatically off-TPU).
+  * ``sharded``   — ``shard_map`` over a device mesh: the LHS replicated
+    per device (the paper's storage saving, applied per device), the M
+    system axis sharded, zero collectives in the solve.
+
+``backend="auto"`` picks ``pallas`` when the kernel working set fits the
+VMEM budget and falls back to ``reference`` otherwise (instead of raising).
+
+See DESIGN.md §5 for the full API contract.
+"""
+
+from .plan import Plan, plan
+from .registry import available_backends, get_backend, register_backend
+from .system import MODES, BandedSystem
+
+# importing the backend modules populates the registry
+from . import pallas as _pallas_backend      # noqa: F401,E402
+from . import reference as _reference_backend  # noqa: F401,E402
+from . import sharded as _sharded_backend    # noqa: F401,E402
+
+__all__ = [
+    "BandedSystem",
+    "MODES",
+    "Plan",
+    "available_backends",
+    "get_backend",
+    "plan",
+    "register_backend",
+]

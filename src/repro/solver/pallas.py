@@ -1,0 +1,164 @@
+"""``pallas`` backend: the interleaved Pallas TPU kernels from
+``repro.kernels``, with VMEM-aware ``block_m`` auto-tuning.
+
+Layout (DESIGN.md §2): the system index M rides the 128-wide lane axis
+(one system per lane — the paper's one system per CUDA thread), the
+unknown index N is the sequential sweep axis, and the shared LHS sits in a
+single VMEM block whose index_map is constant across the grid.
+
+``block_m`` auto-tuning: the largest lane-tile from ``_BLOCK_M_CANDIDATES``
+whose working set (``vmem_working_set``) fits the VMEM budget is chosen, so
+bigger batches amortise the shared-LHS block over more lanes without
+tripping ``check_vmem``.  ``supports()`` reports whether a system can run
+on this backend at all — ``plan(backend="auto")`` consults it and falls
+back to ``reference`` instead of raising.
+
+Periodic boundaries: the kernels solve the truncated band; the rank-1
+Sherman-Morrison (tridiag) / rank-4 Woodbury (penta) corner corrections are
+applied outside the kernel — a handful of O(M) dots, exactly the paper's
+"2-kernel pipeline".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import penta as _penta
+from repro.core import tridiag as _tridiag
+from repro.kernels import common as _kcommon
+from repro.kernels import ops as _kops
+
+from .registry import register_backend
+from .system import BandedSystem
+
+_BLOCK_M_CANDIDATES = (1024, 512, 256, 128)
+
+
+def _vmem_counts(system: BandedSystem) -> tuple:
+    """(n_rhs_blocks, n_lhs_vecs) matching the check_vmem calls in
+    repro.kernels.ops for each kernel this backend dispatches to."""
+    if system.bandwidth == 3:
+        return (6, 0) if system.mode == "batch" else (2, 3)
+    return (9, 0) if system.mode == "batch" else (2, 5)
+
+
+def auto_block_m(system: BandedSystem) -> int | None:
+    """Largest candidate lane tile whose working set fits the VMEM budget
+    (None if even the smallest does not fit)."""
+    n_rhs, n_lhs = _vmem_counts(system)
+    itemsize = jnp.dtype(system.dtype).itemsize
+    cap = None
+    if system.batch is not None:
+        # no point tiling wider than the (lane-padded) batch itself
+        cap = -(-system.batch // _kcommon.LANE) * _kcommon.LANE
+    for bm in _BLOCK_M_CANDIDATES:
+        if cap is not None and bm > max(cap, _BLOCK_M_CANDIDATES[-1]):
+            continue
+        ws = _kcommon.vmem_working_set(system.n, bm, n_rhs, n_lhs,
+                                       itemsize=itemsize)
+        if ws <= _kcommon.VMEM_BUDGET_BYTES:
+            return bm
+    return None
+
+
+def supports(system: BandedSystem, *, block_m: int | None = None) -> tuple:
+    """(ok, reason). Used by ``plan(backend="auto")`` for fallback."""
+    if system.periodic and system.mode == "batch":
+        return False, ("no Pallas kernel for periodic per-system-LHS solves; "
+                       "use backend='reference'")
+    n_rhs, n_lhs = _vmem_counts(system)
+    itemsize = jnp.dtype(system.dtype).itemsize
+    if block_m is not None:
+        # an explicit block_m must itself fit, or auto would pick pallas
+        # only to have check_vmem raise at solve time
+        ws = _kcommon.vmem_working_set(system.n, block_m, n_rhs, n_lhs,
+                                       itemsize=itemsize)
+        if ws > _kcommon.VMEM_BUDGET_BYTES:
+            return False, (f"working set {ws / 2**20:.1f} MiB at block_m="
+                           f"{block_m} exceeds VMEM budget "
+                           f"({_kcommon.VMEM_BUDGET_BYTES / 2**20:.0f} MiB)")
+        return True, f"block_m={block_m}"
+    bm = auto_block_m(system)
+    if bm is None:
+        ws = _kcommon.vmem_working_set(system.n, _BLOCK_M_CANDIDATES[-1],
+                                       n_rhs, n_lhs, itemsize=itemsize)
+        return False, (f"working set {ws / 2**20:.1f} MiB at block_m="
+                       f"{_BLOCK_M_CANDIDATES[-1]} exceeds VMEM budget "
+                       f"({_kcommon.VMEM_BUDGET_BYTES / 2**20:.0f} MiB)")
+    return True, f"block_m={bm}"
+
+
+@register_backend("pallas")
+class PallasBackend:
+    """Interleaved Pallas TPU kernels (``interpret=True`` off-TPU)."""
+
+    def __init__(self, system: BandedSystem, *, block_m: int | None = None,
+                 unroll: int = 1, interpret: bool | None = None,
+                 method=None, mesh=None, batch_axis=None):
+        del method, mesh, batch_axis  # option-set parity with other backends
+        ok, why = supports(system, block_m=block_m)
+        if not ok:
+            raise NotImplementedError(
+                f"pallas backend cannot run {system.describe()}: {why}")
+        self.system = system
+        self.block_m = block_m if block_m is not None else auto_block_m(system)
+        self.unroll = unroll
+        self.interpret = interpret
+        self.stored = self._build_stored()
+
+    def _build_stored(self):
+        s = self.system
+        if s.mode == "batch":
+            from .reference import build_stored
+            return build_stored(s)
+        if s.bandwidth == 3:
+            if s.periodic:
+                return _tridiag.periodic_thomas_factor(*s.diagonals)
+            return _tridiag.thomas_factor(*s.diagonals)
+        if s.periodic:
+            return _penta.periodic_penta_factor(*s.diagonals)
+        return _penta.penta_factor(*s.diagonals)
+
+    def solve(self, rhs: jax.Array, *, unroll: int | None = None,
+              method=None) -> jax.Array:
+        del method  # the sweep schedule is fixed by the kernel
+        s = self.system
+        squeeze = rhs.ndim == 1
+        if squeeze:
+            rhs = rhs[:, None]
+        # no point tiling wider than the (lane-padded) RHS itself — padding
+        # up to a 1024-wide tile for a 96-wide batch wastes ~10x the sweeps
+        m_pad = -(-rhs.shape[1] // _kcommon.LANE) * _kcommon.LANE
+        kw = dict(block_m=min(self.block_m, max(m_pad, _kcommon.LANE)),
+                  interpret=self.interpret,
+                  unroll=self.unroll if unroll is None else unroll)
+
+        if s.bandwidth == 3:
+            if s.mode == "batch":
+                st = self.stored
+                x = _kops.thomas_batch(st["a"], st["b"], st["c"], rhs, **kw)
+            elif s.periodic:
+                pf = self.stored
+                y = _kops.thomas_constant(pf.factor, rhs, **kw)
+                # rank-1 Sherman-Morrison corner correction (paper Eq. 15)
+                v_dot_y = y[0] + pf.v_last * y[-1]
+                x = y - (v_dot_y * pf.inv_denom_sm) * pf.z[:, None]
+            else:
+                x = _kops.thomas_constant(self.stored, rhs, **kw)
+        else:
+            uniform = s.mode == "uniform"
+            if s.mode == "batch":
+                st = self.stored
+                x = _kops.penta_batch(st["a"], st["b"], st["c"], st["d"],
+                                      st["e"], rhs, **kw)
+            elif s.periodic:
+                pf = self.stored
+                y = _kops.penta_constant(pf.factor, rhs, uniform=uniform, **kw)
+                # rank-4 Woodbury corner correction (4 x M dots)
+                w = pf.Minv @ _penta._vty(pf.vcoef, y)
+                x = y - jnp.tensordot(pf.Z, w, axes=([1], [0]))
+            else:
+                x = _kops.penta_constant(self.stored, rhs, uniform=uniform,
+                                         **kw)
+        return x[:, 0] if squeeze else x

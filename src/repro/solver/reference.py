@@ -1,0 +1,156 @@
+"""``reference`` backend: pure-JAX ``lax.scan`` sweeps from ``repro.core``.
+
+This is the portable oracle every other backend is tested against.  The
+factor/solve logic used to live inside ``repro.core.banded``'s operators;
+it now lives here so that the deprecated operators, the ``sharded``
+backend, and the front-end all share one implementation.
+
+Three module-level functions carry the state machine so they can be reused
+outside the class (e.g. inside ``shard_map`` bodies, which need pure
+functions of (static meta, stored pytree, rhs)):
+
+  * ``build_stored(system)``   — factor once (constant/uniform) or tile the
+    per-system LHS copies (batch).
+  * ``expand_uniform(...)``    — re-broadcast the scalar diagonal of a
+    uniform-mode factor back to a vector for the sweep.
+  * ``solve_stored(...)``      — run the solve given meta + stored + rhs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import penta as _penta
+from repro.core import tridiag as _tridiag
+
+from .registry import register_backend
+from .system import BandedSystem
+
+
+def build_stored(system: BandedSystem, *, method: str = "scan"):
+    """Factor (constant/uniform) or materialise per-system copies (batch)."""
+    n, diags, dtype = system.n, system.diagonals, system.dtype
+
+    if system.mode == "batch":
+        m = system.batch
+        tile = lambda v: (jnp.broadcast_to(v[:, None], (n, m))
+                          + jnp.zeros((n, m), dtype))
+        return {k: tile(v) for k, v in zip(system.diagonal_names, diags)}
+
+    if system.bandwidth == 3:
+        if system.periodic:
+            f = _tridiag.periodic_thomas_factor(*diags, method=method)
+        else:
+            f = _tridiag.thomas_factor(*diags, method=method)
+        if system.mode == "uniform":
+            # all-equal diagonals: the `a` vector inside the factor is a
+            # scalar broadcast — store it as 0-d (O(2N) factor storage).
+            if system.periodic:
+                f = f._replace(factor=f.factor._replace(a=f.factor.a[1]))
+            else:
+                f = f._replace(a=f.a[1])
+        return f
+
+    if system.periodic:
+        f = _penta.periodic_penta_factor(*diags)
+    else:
+        f = _penta.penta_factor(*diags)
+    if system.mode == "uniform":
+        # cuPentUniformBatch: drop the eps (= a) vector -> scalar.
+        if system.periodic:
+            f = f._replace(factor=f.factor._replace(eps=f.factor.eps[2]))
+        else:
+            f = f._replace(eps=f.eps[2])
+    return f
+
+
+def expand_uniform(bandwidth: int, periodic: bool, n: int, stored):
+    """Uniform mode stores one diagonal as a scalar; expand it for solving."""
+    f = stored
+    if bandwidth == 3:
+        if periodic:
+            inner = f.factor
+            a = jnp.full((n,), inner.a, inner.inv_denom.dtype).at[0].set(0)
+            return f._replace(factor=inner._replace(a=a))
+        a = jnp.full((n,), f.a, f.inv_denom.dtype).at[0].set(0)
+        return f._replace(a=a)
+
+    def fix(inner):
+        eps = jnp.full((n,), inner.eps, inner.beta.dtype)
+        eps = eps.at[jnp.array([0, 1])].set(0)
+        return inner._replace(eps=eps)
+
+    if periodic:
+        return f._replace(factor=fix(f.factor))
+    return fix(f)
+
+
+def solve_stored(bandwidth: int, mode: str, periodic: bool, n: int, stored,
+                 rhs: jax.Array, *, method: str = "scan",
+                 unroll: int = 1) -> jax.Array:
+    """Solve given (static meta, stored pytree, rhs). rhs: (N,) or (N, M)."""
+    if bandwidth == 3:
+        if mode == "batch":
+            s = stored
+            if periodic:
+                def one(a, b, c, d1):
+                    pf = _tridiag.periodic_thomas_factor(a, b, c, method=method)
+                    return _tridiag.periodic_thomas_solve(pf, d1, method=method)
+                return jax.vmap(one, in_axes=1, out_axes=1)(
+                    s["a"], s["b"], s["c"], rhs)
+            # cuThomasBatch semantics: factor fused into the solve, every call.
+            return _tridiag.thomas_factor_solve(s["a"], s["b"], s["c"], rhs,
+                                                method=method)
+        f = (expand_uniform(bandwidth, periodic, n, stored)
+             if mode == "uniform" else stored)
+        if periodic:
+            return _tridiag.periodic_thomas_solve(f, rhs, method=method,
+                                                  unroll=unroll)
+        return _tridiag.thomas_solve(f, rhs, method=method, unroll=unroll)
+
+    if mode == "batch":
+        s = stored
+        if periodic:
+            def one(a, b, c, d, e, r):
+                pf = _penta.periodic_penta_factor(a, b, c, d, e)
+                return _penta.periodic_penta_solve(pf, r, method=method)
+            return jax.vmap(one, in_axes=1, out_axes=1)(
+                s["a"], s["b"], s["c"], s["d"], s["e"], rhs)
+        return _penta.penta_factor_solve(s["a"], s["b"], s["c"], s["d"],
+                                         s["e"], rhs, method=method)
+    f = (expand_uniform(bandwidth, periodic, n, stored)
+         if mode == "uniform" else stored)
+    if periodic:
+        return _penta.periodic_penta_solve(f, rhs, method=method,
+                                           unroll=unroll)
+    return _penta.penta_solve(f, rhs, method=method, unroll=unroll)
+
+
+@register_backend("reference")
+class ReferenceBackend:
+    """Pure-JAX scan backend (factor once, broadcast to every RHS lane)."""
+
+    def __init__(self, system: BandedSystem, *, method: str = "scan",
+                 unroll: int = 1, block_m=None, interpret=None, mesh=None,
+                 batch_axis=None):
+        # block_m / interpret / mesh are accepted (and ignored) so that
+        # callers can flip `backend=` without changing the option set.
+        del block_m, interpret, mesh, batch_axis
+        self.system = system
+        self.method = method
+        self.unroll = unroll
+        self.stored = build_stored(system, method=method)
+
+    def factor_for_solve(self):
+        if self.system.mode == "uniform":
+            return expand_uniform(self.system.bandwidth, self.system.periodic,
+                                  self.system.n, self.stored)
+        return self.stored
+
+    def solve(self, rhs: jax.Array, *, method: str | None = None,
+              unroll: int | None = None) -> jax.Array:
+        s = self.system
+        return solve_stored(s.bandwidth, s.mode, s.periodic, s.n, self.stored,
+                            rhs, method=method or self.method,
+                            unroll=self.unroll if unroll is None else unroll)

@@ -1,0 +1,45 @@
+"""Backend registry for ``repro.solver``.
+
+A backend is a class with the contract::
+
+    class MyBackend:
+        def __init__(self, system: BandedSystem, **opts): ...
+        stored: Any                      # factor / LHS pytree held by the plan
+        def solve(self, rhs, **kw): ...  # (N, M) or (N,) interleaved RHS -> x
+
+Register with::
+
+    @register_backend("mybackend")
+    class MyBackend: ...
+
+Later PRs (caching, async, new accelerators) plug in here without touching
+the front-end: ``plan(system, backend="mybackend")`` just works.
+"""
+
+from __future__ import annotations
+
+_REGISTRY: dict = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a solver backend under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_backend(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver backend {name!r}; available: "
+            f"{available_backends()}") from None
+
+
+def available_backends() -> list:
+    return sorted(_REGISTRY)

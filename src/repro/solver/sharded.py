@@ -1,0 +1,99 @@
+"""``sharded`` backend: the paper's single-LHS idea at cluster scale.
+
+One LHS copy per DEVICE (replicated — the paper's storage saving applied
+per device), the M system axis sharded across a mesh, zero collectives in
+the solve: systems are independent, so each device runs the reference
+sweeps on its local slice of the interleaved batch.
+
+For ``mode="batch"`` the per-system LHS copies are sharded *with* their
+systems (each device only holds the diagonals of its own slice).  The M
+axis is padded to a multiple of the mesh size with identity rows
+(``main diagonal = 1``) so padded lanes solve trivially and are sliced off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .reference import ReferenceBackend, solve_stored
+from .registry import register_backend
+from .system import BandedSystem
+
+
+def default_mesh(axis_name: str = "batch") -> Mesh:
+    """1-D mesh over every visible device."""
+    return Mesh(np.array(jax.devices()), (axis_name,))
+
+
+@register_backend("sharded")
+class ShardedBackend:
+    """shard_map-replicated-LHS over a device mesh."""
+
+    def __init__(self, system: BandedSystem, *, mesh: Mesh | None = None,
+                 batch_axis: str | tuple | None = None, method: str = "scan",
+                 unroll: int = 1, block_m=None, interpret=None):
+        del block_m, interpret  # option-set parity with other backends
+        self.system = system
+        self._ref = ReferenceBackend(system, method=method, unroll=unroll)
+        self.stored = self._ref.stored
+        if mesh is None:
+            mesh = default_mesh()
+            batch_axis = mesh.axis_names[0]
+        elif batch_axis is None:
+            batch_axis = mesh.axis_names[-1]
+        self.mesh = mesh
+        self.batch_axis = batch_axis
+        axes = batch_axis if isinstance(batch_axis, tuple) else (batch_axis,)
+        self.n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def _pad_batch(self, x: jax.Array, pad: int, main_diag: str | None):
+        """Pad the M axis; per-system main-diagonal copies pad with 1 so the
+        padded lanes are identity solves (no inf/nan in dead lanes)."""
+        if pad == 0:
+            return x
+        val = 1.0 if main_diag else 0.0
+        return jnp.pad(x, [(0, 0), (0, pad)], constant_values=val)
+
+    def solve(self, rhs: jax.Array, *, method: str | None = None,
+              unroll: int | None = None) -> jax.Array:
+        from jax.experimental.shard_map import shard_map
+
+        s = self.system
+        method = method or self._ref.method
+        unroll = self._ref.unroll if unroll is None else unroll
+        squeeze = rhs.ndim == 1
+        if squeeze:
+            rhs = rhs[:, None]
+        m = rhs.shape[1]
+        pad = (-m) % self.n_shards
+        spec = P(None, self.batch_axis)
+
+        if s.mode == "batch":
+            if s.batch != m:
+                raise ValueError(f"batch-mode system built for M={s.batch} "
+                                 f"but rhs has M={m}")
+            main = s.diagonal_names[s.bandwidth // 2]
+            stored = {k: self._pad_batch(v, pad, main_diag=(k == main))
+                      for k, v in self.stored.items()}
+            fn = shard_map(
+                lambda st, r: solve_stored(s.bandwidth, s.mode, s.periodic,
+                                           s.n, st, r, method=method,
+                                           unroll=unroll),
+                mesh=self.mesh, in_specs=(spec, spec), out_specs=spec,
+                check_rep=False)
+            x = fn(stored, jnp.pad(rhs, [(0, 0), (0, pad)]))
+        else:
+            stored = self.stored  # replicated: closed over, one copy/device
+            fn = shard_map(
+                lambda r: solve_stored(s.bandwidth, s.mode, s.periodic,
+                                       s.n, stored, r, method=method,
+                                       unroll=unroll),
+                mesh=self.mesh, in_specs=(spec,), out_specs=spec,
+                check_rep=False)
+            x = fn(jnp.pad(rhs, [(0, 0), (0, pad)]))
+
+        x = x[:, :m]
+        return x[:, 0] if squeeze else x

@@ -1,0 +1,106 @@
+"""BandedSystem — the problem spec consumed by ``repro.solver.plan``.
+
+A ``BandedSystem`` is pure data: which banded matrix (bandwidth 3 or 5),
+its diagonals (each a scalar or an ``(N,)`` vector), the boundary
+condition, and the paper's storage mode:
+
+  * ``constant`` — ONE shared LHS for the whole batch
+    (cuThomasConstantBatch / cuPentConstantBatch — the paper's contribution).
+  * ``uniform``  — all entries of each diagonal equal
+    (cuPentUniformBatch): one stored vector degenerates to a scalar.
+  * ``batch``    — per-system LHS copies, factor fused into every solve
+    (cuThomasBatch / cuPentBatch, the prior state of the art).
+
+Backends consume the spec via ``repro.solver.plan``; the spec itself never
+factors anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+MODES = ("constant", "uniform", "batch")
+BANDWIDTHS = (3, 5)
+
+
+def _as_vec(x, n: int, dtype) -> jax.Array:
+    x = jnp.asarray(x, dtype=dtype)
+    if x.ndim == 0:
+        return jnp.full((n,), x, dtype=dtype)
+    if x.shape != (n,):
+        raise ValueError(f"diagonal has shape {x.shape}, expected ({n},)")
+    return x
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BandedSystem:
+    """Spec for a batched banded solve with one (conceptual) LHS.
+
+    ``diagonals`` are ordered sub-most first: ``(a, b, c)`` for bandwidth 3
+    (``a`` sub, ``b`` main, ``c`` super) and ``(a, b, c, d, e)`` for
+    bandwidth 5 (``c`` main), matching the paper's row convention.
+    """
+
+    bandwidth: int
+    diagonals: tuple
+    n: int
+    periodic: bool = False
+    mode: str = "constant"
+    batch: int | None = None
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.bandwidth not in BANDWIDTHS:
+            raise ValueError(f"bandwidth must be one of {BANDWIDTHS}, "
+                             f"got {self.bandwidth}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.mode == "batch" and self.batch is None:
+            raise ValueError("mode='batch' requires batch=M "
+                             "(number of per-system LHS copies)")
+        if self.n < self.bandwidth:
+            raise ValueError(f"n={self.n} too small for bandwidth "
+                             f"{self.bandwidth}")
+        if len(self.diagonals) != self.bandwidth:
+            raise ValueError(f"expected {self.bandwidth} diagonals, "
+                             f"got {len(self.diagonals)}")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def tridiag(cls, a, b, c, *, n: int | None = None, periodic: bool = False,
+                mode: str = "constant", batch: int | None = None,
+                dtype=jnp.float32) -> "BandedSystem":
+        """Tridiagonal system: a x_{i-1} + b x_i + c x_{i+1} = rhs_i."""
+        if n is None:
+            n = jnp.asarray(b).shape[0]
+        diags = tuple(_as_vec(v, n, dtype) for v in (a, b, c))
+        return cls(bandwidth=3, diagonals=diags, n=n, periodic=periodic,
+                   mode=mode, batch=batch, dtype=dtype)
+
+    @classmethod
+    def penta(cls, a, b, c, d, e, *, n: int | None = None,
+              periodic: bool = False, mode: str = "constant",
+              batch: int | None = None, dtype=jnp.float32) -> "BandedSystem":
+        """Pentadiagonal system:
+        a x_{i-2} + b x_{i-1} + c x_i + d x_{i+1} + e x_{i+2} = rhs_i."""
+        if n is None:
+            n = jnp.asarray(c).shape[0]
+        diags = tuple(_as_vec(v, n, dtype) for v in (a, b, c, d, e))
+        return cls(bandwidth=5, diagonals=diags, n=n, periodic=periodic,
+                   mode=mode, batch=batch, dtype=dtype)
+
+    # -- helpers ------------------------------------------------------------
+
+    @property
+    def diagonal_names(self) -> tuple:
+        return ("a", "b", "c") if self.bandwidth == 3 else ("a", "b", "c", "d", "e")
+
+    def describe(self) -> str:
+        kind = "tridiag" if self.bandwidth == 3 else "penta"
+        bc = "periodic" if self.periodic else "dirichlet"
+        return f"{kind}/{bc}/{self.mode}/N={self.n}"

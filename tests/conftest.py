@@ -1,0 +1,14 @@
+"""Test-session setup.
+
+Force multiple host CPU devices (before jax initialises its backends) so
+the `sharded` solver backend is exercised on a real multi-device CPU mesh.
+Existing tests build their meshes from `jax.devices()[:1]`, so they are
+unaffected.
+"""
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=4"
+_existing = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _existing:
+    os.environ["XLA_FLAGS"] = f"{_existing} {_FLAG}".strip()

@@ -150,6 +150,7 @@ def test_sharded_solver_multidevice():
     device, systems sharded, no result drift."""
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.core import thomas_factor, thomas_solve
         mesh = jax.make_mesh((8,), ("batch",))
@@ -160,9 +161,9 @@ def test_sharded_solver_multidevice():
         b = (np.abs(a) + np.abs(c) + 2.5).astype(np.float32)
         d = rng.normal(size=(n, m)).astype(np.float32)
         f = thomas_factor(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
-        solve = jax.shard_map(lambda fac, dd: thomas_solve(fac, dd),
-                              mesh=mesh, in_specs=(P(), P(None, "batch")),
-                              out_specs=P(None, "batch"))
+        solve = shard_map(lambda fac, dd: thomas_solve(fac, dd),
+                          mesh=mesh, in_specs=(P(), P(None, "batch")),
+                          out_specs=P(None, "batch"))
         got = jax.jit(solve)(f, jnp.asarray(d))
         want = thomas_solve(f, jnp.asarray(d))
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
