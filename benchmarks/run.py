@@ -14,8 +14,11 @@ constant-vs-batch × reference-vs-pallas is one sweep (``backends`` table).
     PYTHONPATH=src python -m benchmarks.run --json     # + BENCH_solvers.json
 
 ``--json`` additionally writes ``BENCH_solvers.json`` — a list of
-``{name, us_per_call, backend, n, m}`` rows — so the perf trajectory is
-machine-readable across PRs.
+``{name, us_per_call, backend, n, m}`` rows (the ``backends`` sweep, penta
+``batch``-mode rows included, plus the ``grad_solve`` rows timing the
+custom_vjp adjoint) — so the perf trajectory is machine-readable across
+PRs.  CI runs ``--json`` in interpret mode on every push so the perf
+plumbing cannot silently rot.
 """
 
 from __future__ import annotations
@@ -214,13 +217,43 @@ def bench_backends():
             _record(f"solver_tridiag_{mode}_{backend}_N{n}_M{m}", t,
                     backend=backend, n=n, m=m, derived=f"mode={mode}")
     s = 0.11
-    for backend in ("reference", "pallas"):
-        p = plan(BandedSystem.penta(
-            s, -4 * s, 1 + 6 * s, -4 * s, s, n=n, mode="constant"),
-            backend=backend)
-        t = _timeit(jax.jit(p.solve), d, reps=2)
-        _record(f"solver_penta_constant_{backend}_N{n}_M{m}", t,
-                backend=backend, n=n, m=m, derived="mode=constant")
+    for mode in ("constant", "batch"):
+        for backend in ("reference", "pallas"):
+            p = plan(BandedSystem.penta(
+                s, -4 * s, 1 + 6 * s, -4 * s, s, n=n, mode=mode,
+                batch=m if mode == "batch" else None), backend=backend)
+            t = _timeit(jax.jit(p.solve), d, reps=2)
+            _record(f"solver_penta_{mode}_{backend}_N{n}_M{m}", t,
+                    backend=backend, n=n, m=m, derived=f"mode={mode}")
+
+
+# ---------------------------------------------------------------------------
+# Differentiable solves: the custom_vjp adjoint (transposed solve reusing
+# the forward factorization) through the pure factorize/solve API
+# ---------------------------------------------------------------------------
+
+def bench_grad_solve():
+    """Time jax.grad through ``solve`` — the adjoint is one transposed
+    banded solve on the SAME stored factor, so grad should cost ~2x the
+    forward solve, not a refactor + dense VJP."""
+    from repro.solver import BandedSystem, factorize, solve
+    n, m = 256, 512
+    d = _rhs(n, m)
+    sigma = 0.4
+    systems = {
+        "tridiag": BandedSystem.tridiag(-sigma, 1 + 2 * sigma, -sigma, n=n,
+                                        periodic=True),
+        "penta": BandedSystem.penta(0.11, -0.44, 1.66, -0.44, 0.11, n=n,
+                                    periodic=True),
+    }
+    for kind, system in systems.items():
+        fact = factorize(system, backend="reference")
+        fwd = _timeit(jax.jit(lambda r: solve(fact, r)), d, reps=2)
+        g = jax.jit(jax.grad(lambda r: jnp.sum(solve(fact, r) ** 2)))
+        t = _timeit(g, d, reps=2)
+        _record(f"grad_solve_{kind}_reference_N{n}_M{m}", t,
+                backend="reference", n=n, m=m,
+                derived=f"grad/fwd={t / fwd:.2f}x_adjoint_reuses_factor")
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +287,7 @@ TABLES = {
     "fig3": bench_fig3_penta,
     "fig4": bench_fig4_uniform,
     "backends": bench_backends,
+    "grad": bench_grad_solve,
     "memory": bench_memory_table,
     "traffic": bench_kernel_traffic,
     "pallas": bench_pallas_kernels,
@@ -267,7 +301,7 @@ def main() -> None:
     which = [a for a in argv if not a.startswith("--")]
     if not which:
         # --json alone: the solver tables that carry (backend, n, m) rows.
-        which = ["backends"] if write_json else list(TABLES)
+        which = ["backends", "grad"] if write_json else list(TABLES)
     print("name,us_per_call,derived")
     for k in which:
         TABLES[k]()

@@ -18,8 +18,10 @@ from .penta import (
     penta_factor,
     penta_factor_solve,
     penta_solve,
+    penta_solve_t,
     periodic_penta_factor,
     periodic_penta_solve,
+    periodic_penta_solve_t,
 )
 from .recurrence import linear_recurrence, linear_recurrence2
 from .tridiag import (
@@ -28,9 +30,11 @@ from .tridiag import (
     dense_tridiag,
     periodic_thomas_factor,
     periodic_thomas_solve,
+    periodic_thomas_solve_t,
     thomas_factor,
     thomas_factor_solve,
     thomas_solve,
+    thomas_solve_t,
 )
 
 __all__ = [
@@ -38,8 +42,9 @@ __all__ = [
     "PeriodicTridiagFactor", "TridiagFactor", "TridiagOperator",
     "dense_penta", "dense_tridiag",
     "linear_recurrence", "linear_recurrence2",
-    "penta_factor", "penta_factor_solve", "penta_solve",
-    "periodic_penta_factor", "periodic_penta_solve",
+    "penta_factor", "penta_factor_solve", "penta_solve", "penta_solve_t",
+    "periodic_penta_factor", "periodic_penta_solve", "periodic_penta_solve_t",
     "periodic_thomas_factor", "periodic_thomas_solve",
-    "thomas_factor", "thomas_factor_solve", "thomas_solve",
+    "periodic_thomas_solve_t",
+    "thomas_factor", "thomas_factor_solve", "thomas_solve", "thomas_solve_t",
 ]

@@ -47,6 +47,7 @@ class PeriodicPentaFactor(NamedTuple):
     Z: jax.Array          # (N, 4)  A'^{-1} U
     Minv: jax.Array       # (4, 4)  (I + V^T Z)^{-1}
     vcoef: jax.Array      # (6,) corner coefficients [a0, b0, a1, eN2, dN1, eN1]
+    Zt: jax.Array         # (N, 4)  A'^{-T} V — the adjoint's corner aux
 
 
 def penta_factor(a, b, c, d, e, *, unroll: int = 1) -> PentaFactor:
@@ -100,6 +101,44 @@ def penta_solve(f: PentaFactor, rhs: jax.Array, *,
     return x
 
 
+def penta_solve_t(f: PentaFactor, g: jax.Array, *,
+                  method: str = "scan", unroll: int = 1) -> jax.Array:
+    """Solve the TRANSPOSED system A^T x = g from the SAME LR factorisation.
+
+    A = L R (L: diagonal 1/inv_alpha, sub beta, sub-sub eps; R: unit diagonal,
+    super gamma, super-super delta), so A^T = R^T L^T reuses the stored O(5N)
+    factor — no transposed refactorisation:
+
+        R^T y = g :  y_i = g_i - gamma_{i-1} y_{i-1} - delta_{i-2} y_{i-2}
+        L^T x = y :  x_i = (y_i - beta_{i+1} x_{i+1} - eps_{i+2} x_{i+2})
+                           * inv_alpha_i
+
+    ``f.eps`` must be vector-shaped here (expand uniform-mode factors with
+    ``repro.solver.reference.expand_uniform`` first, exactly as for the
+    forward solve).
+    """
+    g = jnp.asarray(g)
+    eps = _align(jnp.broadcast_to(f.eps, f.beta.shape), g)
+    beta = _align(f.beta, g)
+    inv_alpha = _align(f.inv_alpha, g)
+    gamma = _align(f.gamma, g)
+    delta = _align(f.delta, g)
+
+    zero1 = jnp.zeros_like(gamma[:1])
+    zero2 = jnp.zeros_like(gamma[:2])
+    gamma_prev = jnp.concatenate([zero1, gamma[:-1]], axis=0)   # gamma_{i-1}
+    delta_prev2 = jnp.concatenate([zero2, delta[:-2]], axis=0)  # delta_{i-2}
+    beta_next = jnp.concatenate([beta[1:], zero1], axis=0)      # beta_{i+1}
+    eps_next2 = jnp.concatenate([eps[2:], zero2], axis=0)       # eps_{i+2}
+
+    y = linear_recurrence2(-gamma_prev, -delta_prev2, g,
+                           method=method, unroll=unroll)
+    x = linear_recurrence2(-beta_next * inv_alpha, -eps_next2 * inv_alpha,
+                           y * inv_alpha, reverse=True,
+                           method=method, unroll=unroll)
+    return x
+
+
 def penta_factor_solve(a, b, c, d, e, rhs, *, method: str = "scan") -> jax.Array:
     """Fused factor+solve (cuPentBatch semantics — re-factors every call)."""
     return penta_solve(penta_factor(a, b, c, d, e), rhs, method=method)
@@ -143,7 +182,10 @@ def periodic_penta_factor(a, b, c, d, e) -> PeriodicPentaFactor:
     U = U.at[0, 0].set(1.0).at[1, 1].set(1.0).at[-2, 2].set(1.0).at[-1, 3].set(1.0)
     Z = penta_solve(f, U)                      # (N, 4)
     M4 = jnp.eye(4, dtype=c.dtype) + _vty(vcoef, Z)  # (4, 4)
-    return PeriodicPentaFactor(factor=f, Z=Z, Minv=jnp.linalg.inv(M4), vcoef=vcoef)
+    # the adjoint's auxiliary solves A'^{-T} V, also once per operator
+    Zt = penta_solve_t(f, _corner_V(vcoef, n))       # (N, 4)
+    return PeriodicPentaFactor(factor=f, Z=Z, Minv=jnp.linalg.inv(M4),
+                               vcoef=vcoef, Zt=Zt)
 
 
 def periodic_penta_solve(pf: PeriodicPentaFactor, rhs: jax.Array, *,
@@ -152,6 +194,32 @@ def periodic_penta_solve(pf: PeriodicPentaFactor, rhs: jax.Array, *,
     y = penta_solve(pf.factor, rhs, method=method, unroll=unroll)
     w = pf.Minv @ _vty(pf.vcoef, y)            # (4,) or (4, M)
     return y - jnp.tensordot(pf.Z, w, axes=([1], [0]))
+
+
+def _corner_V(vcoef: jax.Array, n: int) -> jax.Array:
+    """Materialise V (N, 4) of the rank-4 correction P = A' + U V^T."""
+    a0, b0, a1, eN2, dN1, eN1 = vcoef
+    V = jnp.zeros((n, 4), vcoef.dtype)
+    return (V.at[-2, 0].set(a0).at[-1, 0].set(b0)
+             .at[-1, 1].set(a1)
+             .at[0, 2].set(eN2)
+             .at[0, 3].set(dN1).at[1, 3].set(eN1))
+
+
+def periodic_penta_solve_t(pf: PeriodicPentaFactor, g: jax.Array, *,
+                           method: str = "scan", unroll: int = 1) -> jax.Array:
+    """Transposed periodic penta solve P^T x = g from the SAME stored factor.
+
+    P = A' + U V^T, so P^T = A'^T + V U^T and Woodbury gives
+        x = y - Zt (I + U^T A'^{-T} V)^{-1} U^T y,
+    with y = A'^{-T} g and Zt = A'^{-T} V (solved once at factor time, like
+    the forward's Z).  Since U^T A'^{-T} V = (V^T Z)^T, the 4x4 inverse is
+    just the stored ``Minv`` transposed — the adjoint needs no second LHS.
+    """
+    y = penta_solve_t(pf.factor, g, method=method, unroll=unroll)
+    uty = jnp.stack([y[0], y[1], y[-2], y[-1]], axis=0)            # U^T y
+    h = pf.Minv.T @ uty
+    return y - jnp.tensordot(pf.Zt, h, axes=([1], [0]))
 
 
 def dense_penta(a, b, c, d, e, periodic: bool = False) -> jax.Array:

@@ -42,6 +42,7 @@ class PeriodicTridiagFactor(NamedTuple):
     z: jax.Array           # A'^{-1} u, shape (N,) or (N, M)
     v_last: jax.Array      # a_0 / gamma (v = e_0 + v_last * e_{N-1})
     inv_denom_sm: jax.Array  # 1 / (1 + v . z)
+    zt: jax.Array          # A'^{-T} v — the adjoint's corner aux, same (N,)
 
 
 def thomas_factor(a: jax.Array, b: jax.Array, c: jax.Array, *,
@@ -113,6 +114,33 @@ def thomas_solve(f: TridiagFactor, d: jax.Array, *,
     return x
 
 
+def thomas_solve_t(f: TridiagFactor, g: jax.Array, *,
+                   method: str = "scan", unroll: int = 1) -> jax.Array:
+    """Solve the TRANSPOSED system A^T x = g from the SAME factorisation.
+
+    The stored factor is A = L U (L lower bidiagonal with diagonal
+    ``1/inv_denom`` and sub-diagonal ``a``; U unit upper bidiagonal with
+    super-diagonal ``c_hat``), so A^T = U^T L^T needs no second factor —
+    the adjoint of every forward solve reuses the forward's O(3N) storage:
+
+        U^T y = g :  y_i = g_i - c_hat_{i-1} y_{i-1}
+        L^T x = y :  x_i = (y_i - a_{i+1} x_{i+1}) * inv_denom_i
+    """
+    g = jnp.asarray(g)
+    a = _align(f.a, g)
+    inv_denom = _align(f.inv_denom, g)
+    c_hat = _align(f.c_hat, g)
+
+    zero = jnp.zeros_like(c_hat[:1])
+    c_hat_prev = jnp.concatenate([zero, c_hat[:-1]], axis=0)   # c_hat_{i-1}
+    a_next = jnp.concatenate([a[1:], zero], axis=0)            # a_{i+1}
+
+    y = linear_recurrence(-c_hat_prev, g, method=method, unroll=unroll)
+    x = linear_recurrence(-a_next * inv_denom, y * inv_denom,
+                          reverse=True, method=method, unroll=unroll)
+    return x
+
+
 def thomas_factor_solve(a, b, c, d, *, method: str = "scan") -> jax.Array:
     """Fused factor+solve (cuThomasBatch semantics: the baseline re-factors on
     every call because its in-place sweeps destroy the LHS copy)."""
@@ -145,8 +173,13 @@ def periodic_thomas_factor(a: jax.Array, b: jax.Array, c: jax.Array, *,
     z = thomas_solve(f, u, method=method)
     v_last = a[0] / gamma
     v_dot_z = z[0] + v_last * z[-1]
+    # the adjoint's auxiliary solve A'^{-T} v, also once per operator (the
+    # backward pass of every solve reuses it, like the forward reuses z)
+    v = jnp.zeros_like(b).at[0].set(1.0).at[-1].set(v_last)
+    zt = thomas_solve_t(f, v, method=method)
     return PeriodicTridiagFactor(
-        factor=f, z=z, v_last=v_last, inv_denom_sm=1.0 / (1.0 + v_dot_z)
+        factor=f, z=z, v_last=v_last, inv_denom_sm=1.0 / (1.0 + v_dot_z),
+        zt=zt,
     )
 
 
@@ -158,6 +191,30 @@ def periodic_thomas_solve(pf: PeriodicTridiagFactor, d: jax.Array, *,
     corr = v_dot_y * pf.inv_denom_sm
     z = _align(pf.z, y) if pf.z.ndim < y.ndim else pf.z
     return y - corr * z
+
+
+def periodic_thomas_solve_t(pf: PeriodicTridiagFactor, g: jax.Array, *,
+                            method: str = "scan", unroll: int = 1) -> jax.Array:
+    """Transposed periodic solve A^T x = g from the SAME stored factor.
+
+    A = A' + u v^T, so A^T = A'^T + v u^T and Sherman-Morrison gives
+        x = y - (u . y) / (1 + u . w) * w,
+    with y = A'^{-T} g and w = A'^{-T} v = ``pf.zt`` (solved once at factor
+    time, exactly like the forward's z).  The denominator 1 + u.w = 1 + v.z
+    is the stored ``inv_denom_sm`` (scalar transpose); and u is recovered
+    from the factor itself (gamma = -b_0 = -1/(2 inv_denom_0), c_{N-1} =
+    c_hat_{N-1} / inv_denom_{N-1}) — no second LHS copy anywhere in the
+    adjoint.
+    """
+    f = pf.factor
+    y = thomas_solve_t(f, g, method=method, unroll=unroll)
+
+    gamma = -0.5 / f.inv_denom[0]
+    c_last = f.c_hat[-1] / f.inv_denom[-1]
+    u_dot_y = gamma * y[0] + c_last * y[-1]
+    corr = u_dot_y * pf.inv_denom_sm
+    zt = _align(pf.zt, y) if pf.zt.ndim < y.ndim else pf.zt
+    return y - corr * zt
 
 
 def dense_tridiag(a, b, c, periodic: bool = False) -> jax.Array:

@@ -11,9 +11,14 @@ tridiagonal solves sharing one LHS — the x-sweep batches over y (and any
 field batch), the y-sweep over x. This is exactly the "single LHS, many
 interleaved RHS" shape the paper optimises.
 
-Both sweeps route through ``repro.solver``; ``backend`` takes any registry
-name (``reference`` — alias ``core`` —, ``pallas``, ``sharded``) or
-``auto``, so the same 2-D stepper retargets across execution backends.
+Both sweeps route through the transformation-native ``repro.solver`` API:
+the x- and y-operators are factored ONCE into ``Factorization`` pytrees and
+the ``lax.scan`` time loop closes over both, so each half-step solve is
+traced once per integration and the whole 2-D trajectory differentiates
+through ``jax.grad`` (each adjoint half-step reuses its forward factor).
+``backend`` takes any registry name (``reference`` — alias ``core`` —,
+``pallas``, ``sharded``) or ``auto``, so the same 2-D stepper retargets
+across execution backends.
 """
 
 from __future__ import annotations
@@ -24,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.solver import BandedSystem, plan
+from repro.solver import BandedSystem, factorize, solve
 from .stencil import apply_periodic_stencil
 
 
@@ -45,14 +50,14 @@ class ADI2D:
     def sy(self) -> float:
         return self.alpha * self.dt / (2.0 * (1.0 / self.ny) ** 2)
 
-    def _plan(self, n, s):
+    def _factorize(self, n, s):
         system = BandedSystem.tridiag(-s, 1.0 + 2.0 * s, -s, n=n,
                                       periodic=True, dtype=self.dtype)
-        return plan(system, backend=self.backend)
+        return factorize(system, backend=self.backend)
 
     def step_fn(self):
-        px = self._plan(self.nx, self.sx)
-        py = self._plan(self.ny, self.sy)
+        fx = self._factorize(self.nx, self.sx)
+        fy = self._factorize(self.ny, self.sy)
         sx, sy = self.sx, self.sy
 
         def step(field):
@@ -61,12 +66,12 @@ class ADI2D:
             cy = field.reshape(field.shape[0], field.shape[1], -1)
             rhs = cy + sy * apply_periodic_stencil(
                 jnp.moveaxis(cy, 1, 0), [1.0, -2.0, 1.0]).swapaxes(0, 1)
-            c_star = px.solve(rhs.reshape(field.shape[0], -1))
+            c_star = solve(fx, rhs.reshape(field.shape[0], -1))
             c_star = c_star.reshape(cy.shape)
             # y-implicit: RHS = (1 + sx Dxx) C*  (apply along x)
             rhs2 = c_star + sx * apply_periodic_stencil(c_star, [1.0, -2.0, 1.0])
             rhs2_t = jnp.moveaxis(rhs2, 1, 0)                 # (NY, NX, B)
-            c_next = py.solve(rhs2_t.reshape(field.shape[1], -1))
+            c_next = solve(fy, rhs2_t.reshape(field.shape[1], -1))
             c_next = jnp.moveaxis(c_next.reshape(rhs2_t.shape), 0, 1)
             return c_next.reshape(field.shape)
 

@@ -6,8 +6,13 @@ Implicit LHS (Eq. 11): a_i = -sigma, b_i = 1+2 sigma, c_i = -sigma with
 sigma = dt / (2 dx^2); the LHS is IDENTICAL for every system in the batch —
 exactly the paper's single-LHS setting.
 
-Solves route through the unified ``repro.solver`` front-end, so flipping
-backends is one argument (all bit-compatible within fp tolerance):
+Solves route through the transformation-native ``repro.solver`` API:
+``factorize`` builds ONE ``Factorization`` pytree per stepper, the
+``lax.scan`` time loop closes over it as a constant, and ``solve`` is
+traced exactly once for the whole integration — no Python re-dispatch per
+step, and the trajectory is differentiable end-to-end (the adjoint of
+every step reuses the same stored factor).  Flipping backends is one
+argument:
 
   * ``backend="reference"`` (alias ``"core"``) — pure-JAX scan solver.
   * ``backend="pallas"``   — cuThomasConstantBatch Pallas kernel, periodic
@@ -29,7 +34,7 @@ import numpy as np
 
 from repro.core import periodic_thomas_factor
 from repro.kernels import fused_cn_step
-from repro.solver import BandedSystem, plan
+from repro.solver import BandedSystem, factorize, solve
 from .stencil import cn_rhs_diffusion
 
 
@@ -61,7 +66,12 @@ class DiffusionCN:
         return periodic_thomas_factor(a, b, c)
 
     def step_fn(self):
-        """Returns (plan_or_factor, step) where step(field (N, M)) -> next."""
+        """Returns (factorization, step) where step(field (N, M)) -> next.
+
+        The factorization is built ONCE here; ``step`` closes over it, so a
+        ``lax.scan`` (or jit) tracing ``step`` sees it as a constant — the
+        paper's factor-once reuse, extended across the whole time loop.
+        """
         s = self.sigma
 
         if self.backend == "fused":
@@ -71,16 +81,23 @@ class DiffusionCN:
                 return fused_cn_step(pf, s, field)
             return pf, step
 
-        p = plan(self.system(), backend=self.backend)
+        fact = factorize(self.system(), backend=self.backend)
 
         def step(field):
-            return p.solve(cn_rhs_diffusion(field, s))
-        return p, step
+            return solve(fact, cn_rhs_diffusion(field, s))
+        return fact, step
 
     def run(self, field0: jax.Array, n_steps: int, *, use_scan: bool = True):
-        """Integrate n_steps. field0: (N, M)."""
+        """Integrate n_steps. field0: (N, M).
+
+        ``use_scan=True`` (default, all backends): one ``lax.scan`` over the
+        closed-over factorization — factor once, the solve is traced exactly
+        once, and thousands of steps run inside one compiled program.
+        ``use_scan=False`` keeps the step-by-step Python loop (re-traces the
+        solve every step; useful for debugging single steps).
+        """
         _, step = self.step_fn()
-        if use_scan and self.backend in ("core", "reference"):
+        if use_scan:
             def body(f, _):
                 return step(f), None
             out, _ = jax.lax.scan(body, field0, None, length=n_steps)

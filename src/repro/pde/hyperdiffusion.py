@@ -7,11 +7,15 @@ c_i = 1 + 6 sigma with sigma = dt / (2 dx^4) — a *uniform* pentadiagonal
 operator, so all three paper variants apply (cuPentBatch baseline,
 cuPentConstantBatch, cuPentUniformBatch).
 
-Solves route through ``repro.solver``: ``backend`` is any registry name
+Solves route through the transformation-native ``repro.solver`` API:
+``factorize`` once per stepper, the ``lax.scan`` time loop closes over the
+``Factorization`` pytree, the solve is traced exactly once per
+integration, and the whole trajectory is differentiable (the adjoint
+reuses the same stored factor).  ``backend`` is any registry name
 (``reference`` — alias ``core`` —, ``pallas``, ``sharded``) or ``auto``;
 ``mode`` selects the paper's storage variant (``constant`` | ``uniform`` |
 ``batch``).  The pallas path applies the rank-4 Woodbury corner correction
-outside the kernel, inside the plan.
+outside the kernel, inside the solve.
 """
 
 from __future__ import annotations
@@ -22,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.solver import BandedSystem, plan
+from repro.solver import BandedSystem, factorize, solve
 from .stencil import cn_rhs_hyperdiffusion
 
 
@@ -53,17 +57,18 @@ class HyperdiffusionCN:
                                   batch=self.batch, dtype=self.dtype)
 
     def step_fn(self):
-        """Returns (plan, step)."""
-        p = plan(self.system(), backend=self.backend)
+        """Returns (factorization, step); step closes over the factor."""
+        fact = factorize(self.system(), backend=self.backend)
         s = self.sigma
 
         def step(field):
-            return p.solve(cn_rhs_hyperdiffusion(field, s))
-        return p, step
+            return solve(fact, cn_rhs_hyperdiffusion(field, s))
+        return fact, step
 
     def run(self, field0: jax.Array, n_steps: int, *, use_scan: bool = True):
+        """Integrate n_steps: factor once, scan the solve (all backends)."""
         _, step = self.step_fn()
-        if use_scan and self.backend in ("core", "reference"):
+        if use_scan:
             out, _ = jax.lax.scan(lambda f, _: (step(f), None), field0,
                                   None, length=n_steps)
             return out

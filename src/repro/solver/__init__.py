@@ -2,13 +2,24 @@
 
 The paper's contribution is a storage/layout policy (one shared LHS, an
 interleaved ``(N, M)`` RHS batch).  This package exposes that policy through
-ONE front-end, retargetable across execution backends:
+ONE front-end, retargetable across execution backends.
 
-    from repro.solver import BandedSystem, plan
+The canonical, transformation-native spelling is the pure pair
+(``factorize`` / ``solve``) — the factorization is a pytree that crosses
+``jit``/``vmap``/``grad``/``lax.scan`` boundaries, and ``solve`` carries a
+``custom_vjp`` whose adjoint reuses the forward factor:
+
+    from repro.solver import BandedSystem, factorize, solve
 
     system = BandedSystem.tridiag(-s, 1 + 2 * s, -s, n=512, periodic=True)
+    fact = factorize(system, backend="auto")   # factor ONCE -> pytree
+    x = jax.jit(solve)(fact, rhs)              # rhs: (N,) or (N, M)
+    g = jax.grad(lambda r: solve(fact, r).sum())(rhs)   # adjoint, same LHS
+
+The stateful shim remains for convenience (and is itself differentiable):
+
     p = plan(system, backend="auto")     # reference | pallas | sharded | auto
-    x = p.solve(rhs)                     # rhs: (N,) or (N, M) interleaved
+    x = p.solve(rhs)
 
 Backends live in a registry (see ``registry.register_backend``):
 
@@ -27,21 +38,36 @@ VMEM budget and falls back to ``reference`` otherwise (instead of raising).
 See DESIGN.md §5 for the full API contract.
 """
 
+from .functional import (Factorization, SolveMeta, factorize,
+                         transpose_solve, with_options)
 from .plan import Plan, plan
-from .registry import available_backends, get_backend, register_backend
+from .registry import (available_backends, get_backend, get_pure_backend,
+                       register_backend, register_pure_backend)
 from .system import MODES, BandedSystem
 
-# importing the backend modules populates the registry
+# importing the backend modules populates the registries
 from . import pallas as _pallas_backend      # noqa: F401,E402
 from . import reference as _reference_backend  # noqa: F401,E402
 from . import sharded as _sharded_backend    # noqa: F401,E402
 
+# the custom_vjp-wrapped solve (after the backends, so factorize-at-import
+# users see a populated registry)
+from .autodiff import solve                  # noqa: E402
+
 __all__ = [
     "BandedSystem",
+    "Factorization",
     "MODES",
     "Plan",
+    "SolveMeta",
     "available_backends",
+    "factorize",
     "get_backend",
+    "get_pure_backend",
     "plan",
     "register_backend",
+    "register_pure_backend",
+    "solve",
+    "transpose_solve",
+    "with_options",
 ]

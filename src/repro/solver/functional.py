@@ -1,0 +1,195 @@
+"""Transformation-native solver API: pure ``factorize`` / ``solve``.
+
+The paper's storage idea — factor ONE shared LHS, reuse it for an
+arbitrarily large interleaved RHS batch — only pays off inside compiled
+programs if the factorization can *cross JAX transformation boundaries*.
+This module makes the factorization a first-class pytree:
+
+    from repro.solver import BandedSystem, factorize, solve
+
+    fact = factorize(system, backend="auto")     # factor ONCE -> pytree
+    x = solve(fact, rhs)                         # pure, jittable
+    x = jax.jit(solve)(fact, rhs)                # fact crosses jit
+    xs = jax.vmap(solve)(stacked_facts, rhss)    # multi-LHS case
+    g = jax.grad(lambda r: solve(fact, r).sum())(rhs)   # differentiable
+
+  * ``Factorization`` is a ``register_dataclass`` pytree: the stored factor
+    and the spec diagonals are traced leaves; everything a compiler must
+    specialise on (bandwidth, N, mode, boundary condition, backend name,
+    resolved backend options) is hashable static aux data (``SolveMeta``).
+  * ``solve`` carries a ``jax.custom_vjp`` (``repro.solver.autodiff``)
+    whose backward pass solves the TRANSPOSED banded system by reusing the
+    same stored factor fields — the paper's ~75 % / ~83 % storage saving
+    covers the adjoint too — and returns cotangents for the vector-valued
+    diagonals.
+  * ``transpose_solve`` exposes the adjoint solve directly (``A^T x = rhs``
+    from the forward factorization) for hand-written adjoint codes.
+
+A time loop therefore factors once and scans thousands of steps inside one
+compiled program::
+
+    fact = factorize(system)
+    def body(field, _):
+        return solve(fact, build_rhs(field)), None
+    final, _ = jax.lax.scan(body, field0, None, length=10_000)
+
+``Plan`` (``repro.solver.plan``) is now a thin shim over these functions.
+Backends plug in through ``registry.register_pure_backend``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from .registry import get_pure_backend
+from .system import BandedSystem
+
+# legacy spelling used by the pre-frontend pde layer
+ALIASES = {"core": "reference"}
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveMeta:
+    """Everything a solve must specialise on — hashable static aux data.
+
+    ``options`` is a sorted tuple of (key, value) pairs of RESOLVED backend
+    options (e.g. the auto-tuned ``block_m``, the concrete ``Mesh``): two
+    factorizations compare/hash equal exactly when a jitted ``solve`` can be
+    retraced-free reused between them.
+    """
+
+    bandwidth: int
+    n: int
+    mode: str
+    periodic: bool
+    backend: str
+    options: tuple = ()
+
+    def opt(self, key: str, default=None):
+        for k, v in self.options:
+            if k == key:
+                return v
+        return default
+
+    def with_options(self, **updates) -> "SolveMeta":
+        opts = dict(self.options)
+        opts.update({k: v for k, v in updates.items() if v is not None})
+        return dataclasses.replace(self, options=tuple(sorted(opts.items())))
+
+
+@dataclasses.dataclass(frozen=True)
+class Factorization:
+    """A factored LHS as a pytree: leaves trace, meta is static.
+
+    ``stored`` is the backend's factor pytree (the paper's O(k·N) shared
+    storage); ``diagonals`` are the spec's (N,) diagonals, carried as leaves
+    so ``jax.grad`` can return cotangents for them (the stored factor is
+    derived data and receives zero cotangent — see ``repro.solver.autodiff``).
+    """
+
+    diagonals: tuple
+    stored: Any
+    meta: SolveMeta
+
+    # -- conveniences -------------------------------------------------------
+
+    @property
+    def backend(self) -> str:
+        return self.meta.backend
+
+    def describe(self) -> str:
+        kind = "tridiag" if self.meta.bandwidth == 3 else "penta"
+        bc = "periodic" if self.meta.periodic else "dirichlet"
+        return (f"{kind}/{bc}/{self.meta.mode}/N={self.meta.n}"
+                f"@{self.meta.backend}")
+
+
+jax.tree_util.register_dataclass(
+    Factorization,
+    data_fields=["diagonals", "stored"],
+    meta_fields=["meta"],
+)
+
+
+def select_backend(system: BandedSystem, *, block_m: int | None = None) -> str:
+    """The ``backend="auto"`` policy: pallas when it fits, else reference."""
+    from . import pallas as _pallas
+
+    ok, _why = _pallas.supports(system, block_m=block_m)
+    return "pallas" if ok else "reference"
+
+
+def resolve_backend_name(system: BandedSystem, backend: str,
+                         block_m: int | None = None) -> str:
+    backend = ALIASES.get(backend, backend)
+    if backend == "auto":
+        backend = select_backend(system, block_m=block_m)
+    return backend
+
+
+def factorize(system: BandedSystem, backend: str = "auto",
+              **opts) -> Factorization:
+    """Factor ``system`` once into a transformation-crossing pytree.
+
+    ``backend`` is a pure-registry name (``reference`` / ``pallas`` /
+    ``sharded``) or ``"auto"`` (pallas when the kernel working set fits
+    VMEM, else reference).  Backend options (``method``, ``unroll``,
+    ``block_m``, ``interpret``, ``mesh``, ``batch_axis``) are resolved here
+    — at trace time — and frozen into the static meta.
+    """
+    backend = resolve_backend_name(system, backend, opts.get("block_m"))
+    pure = get_pure_backend(backend)
+    stored, options = pure.build(system, **opts)
+    meta = SolveMeta(bandwidth=system.bandwidth, n=system.n,
+                     mode=system.mode, periodic=system.periodic,
+                     backend=backend, options=tuple(sorted(options.items())))
+    return Factorization(diagonals=tuple(system.diagonals), stored=stored,
+                         meta=meta)
+
+
+def _check_batch_width(factorization: Factorization, rhs: jax.Array) -> None:
+    """batch mode stores per-system LHS copies: rhs width must match."""
+    meta = factorization.meta
+    if meta.mode != "batch":
+        return
+    stored_m = next(iter(factorization.stored.values())).shape[1]
+    m = 1 if rhs.ndim == 1 else rhs.shape[1]
+    if m != stored_m:
+        raise ValueError(f"batch-mode factorization built for M={stored_m} "
+                         f"per-system LHS copies but rhs has M={m}")
+
+
+def solve_impl(factorization: Factorization, rhs: jax.Array) -> jax.Array:
+    """The raw (VJP-less) pure solve — dispatch on static meta only.
+
+    Use ``repro.solver.solve`` (the ``custom_vjp``-wrapped spelling from
+    ``autodiff``) unless you explicitly want JAX to differentiate through
+    the sweep instructions.
+    """
+    meta = factorization.meta
+    _check_batch_width(factorization, rhs)
+    return get_pure_backend(meta.backend).solve(meta, factorization.stored,
+                                                rhs)
+
+
+def transpose_solve(factorization: Factorization,
+                    rhs: jax.Array) -> jax.Array:
+    """Solve ``A^T x = rhs`` reusing the FORWARD factorization.
+
+    This is the backward pass of ``solve`` exposed as a public entry point:
+    no transposed refactorisation, no second LHS copy — the same stored
+    factor fields serve forward and adjoint (DESIGN.md §5.1).
+    """
+    meta = factorization.meta
+    _check_batch_width(factorization, rhs)
+    return get_pure_backend(meta.backend).transpose_solve(
+        meta, factorization.stored, rhs)
+
+
+def with_options(factorization: Factorization, **updates) -> Factorization:
+    """A copy of ``factorization`` with per-call option overrides (static)."""
+    return dataclasses.replace(factorization,
+                               meta=factorization.meta.with_options(**updates))

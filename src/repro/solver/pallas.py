@@ -25,11 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import penta as _penta
-from repro.core import tridiag as _tridiag
 from repro.kernels import common as _kcommon
 from repro.kernels import ops as _kops
 
-from .registry import register_backend
+from .registry import register_backend, register_pure_backend
 from .system import BandedSystem
 
 _BLOCK_M_CANDIDATES = (1024, 512, 256, 128)
@@ -89,76 +88,117 @@ def supports(system: BandedSystem, *, block_m: int | None = None) -> tuple:
     return True, f"block_m={bm}"
 
 
+def build_stored(system: BandedSystem):
+    """Factor once into the kernel-facing stored pytree.
+
+    Same factors as the reference backend, except uniform mode is kept
+    full-vector — the kernel reads a stacked LHS block."""
+    from .reference import build_stored as _ref_build
+    return _ref_build(system, scalarize_uniform=False)
+
+
+def solve_stored(bandwidth: int, mode: str, periodic: bool, stored,
+                 rhs: jax.Array, *, block_m: int, unroll: int = 1,
+                 interpret: bool | None = None) -> jax.Array:
+    """Pure kernel dispatch given (static meta, stored pytree, rhs)."""
+    squeeze = rhs.ndim == 1
+    if squeeze:
+        rhs = rhs[:, None]
+    # no point tiling wider than the (lane-padded) RHS itself — padding
+    # up to a 1024-wide tile for a 96-wide batch wastes ~10x the sweeps
+    m_pad = -(-rhs.shape[1] // _kcommon.LANE) * _kcommon.LANE
+    kw = dict(block_m=min(block_m, max(m_pad, _kcommon.LANE)),
+              interpret=interpret, unroll=unroll)
+
+    if bandwidth == 3:
+        if mode == "batch":
+            x = _kops.thomas_batch(stored["a"], stored["b"], stored["c"],
+                                   rhs, **kw)
+        elif periodic:
+            pf = stored
+            y = _kops.thomas_constant(pf.factor, rhs, **kw)
+            # rank-1 Sherman-Morrison corner correction (paper Eq. 15)
+            v_dot_y = y[0] + pf.v_last * y[-1]
+            x = y - (v_dot_y * pf.inv_denom_sm) * pf.z[:, None]
+        else:
+            x = _kops.thomas_constant(stored, rhs, **kw)
+    else:
+        uniform = mode == "uniform"
+        if mode == "batch":
+            x = _kops.penta_batch(stored["a"], stored["b"], stored["c"],
+                                  stored["d"], stored["e"], rhs, **kw)
+        elif periodic:
+            pf = stored
+            y = _kops.penta_constant(pf.factor, rhs, uniform=uniform, **kw)
+            # rank-4 Woodbury corner correction (4 x M dots)
+            w = pf.Minv @ _penta._vty(pf.vcoef, y)
+            x = y - jnp.tensordot(pf.Z, w, axes=([1], [0]))
+        else:
+            x = _kops.penta_constant(stored, rhs, uniform=uniform, **kw)
+    return x[:, 0] if squeeze else x
+
+
+# -- the pure-function contract (repro.solver.functional) -------------------
+
+def _pure_build(system: BandedSystem, *, block_m: int | None = None,
+                unroll: int = 1, interpret: bool | None = None, **_ignored):
+    ok, why = supports(system, block_m=block_m)
+    if not ok:
+        raise NotImplementedError(
+            f"pallas backend cannot run {system.describe()}: {why}")
+    resolved = block_m if block_m is not None else auto_block_m(system)
+    return (build_stored(system),
+            {"block_m": resolved, "unroll": unroll, "interpret": interpret})
+
+
+def _pure_solve(meta, stored, rhs):
+    return solve_stored(meta.bandwidth, meta.mode, meta.periodic, stored, rhs,
+                        block_m=meta.opt("block_m"),
+                        unroll=meta.opt("unroll", 1),
+                        interpret=meta.opt("interpret"))
+
+
+def _pure_transpose(meta, stored, rhs):
+    # The adjoint reuses the SAME stored factor via the reference transposed
+    # sweeps (A^T = U^T L^T from the forward's vectors) — transposed Pallas
+    # kernels are not needed for correctness, only a future perf item.
+    from .reference import transpose_solve_stored
+    return transpose_solve_stored(meta.bandwidth, meta.mode, meta.periodic,
+                                  meta.n, stored, rhs)
+
+
+register_pure_backend("pallas", build=_pure_build, solve=_pure_solve,
+                      transpose_solve=_pure_transpose)
+
+
 @register_backend("pallas")
 class PallasBackend:
-    """Interleaved Pallas TPU kernels (``interpret=True`` off-TPU)."""
+    """Interleaved Pallas TPU kernels (``interpret=True`` off-TPU).
+
+    Thin shim over ``factorize``/``solve``: holds a ``Factorization`` whose
+    static meta froze the auto-tuned ``block_m``, and routes solves through
+    the differentiable ``custom_vjp`` entry point.
+    """
 
     def __init__(self, system: BandedSystem, *, block_m: int | None = None,
                  unroll: int = 1, interpret: bool | None = None,
                  method=None, mesh=None, batch_axis=None):
         del method, mesh, batch_axis  # option-set parity with other backends
-        ok, why = supports(system, block_m=block_m)
-        if not ok:
-            raise NotImplementedError(
-                f"pallas backend cannot run {system.describe()}: {why}")
+        from .functional import factorize
         self.system = system
-        self.block_m = block_m if block_m is not None else auto_block_m(system)
+        self.fact = factorize(system, backend="pallas", block_m=block_m,
+                              unroll=unroll, interpret=interpret)
+        self.block_m = self.fact.meta.opt("block_m")
         self.unroll = unroll
         self.interpret = interpret
-        self.stored = self._build_stored()
-
-    def _build_stored(self):
-        s = self.system
-        if s.mode == "batch":
-            from .reference import build_stored
-            return build_stored(s)
-        if s.bandwidth == 3:
-            if s.periodic:
-                return _tridiag.periodic_thomas_factor(*s.diagonals)
-            return _tridiag.thomas_factor(*s.diagonals)
-        if s.periodic:
-            return _penta.periodic_penta_factor(*s.diagonals)
-        return _penta.penta_factor(*s.diagonals)
+        self.stored = self.fact.stored
 
     def solve(self, rhs: jax.Array, *, unroll: int | None = None,
               method=None) -> jax.Array:
         del method  # the sweep schedule is fixed by the kernel
-        s = self.system
-        squeeze = rhs.ndim == 1
-        if squeeze:
-            rhs = rhs[:, None]
-        # no point tiling wider than the (lane-padded) RHS itself — padding
-        # up to a 1024-wide tile for a 96-wide batch wastes ~10x the sweeps
-        m_pad = -(-rhs.shape[1] // _kcommon.LANE) * _kcommon.LANE
-        kw = dict(block_m=min(self.block_m, max(m_pad, _kcommon.LANE)),
-                  interpret=self.interpret,
-                  unroll=self.unroll if unroll is None else unroll)
-
-        if s.bandwidth == 3:
-            if s.mode == "batch":
-                st = self.stored
-                x = _kops.thomas_batch(st["a"], st["b"], st["c"], rhs, **kw)
-            elif s.periodic:
-                pf = self.stored
-                y = _kops.thomas_constant(pf.factor, rhs, **kw)
-                # rank-1 Sherman-Morrison corner correction (paper Eq. 15)
-                v_dot_y = y[0] + pf.v_last * y[-1]
-                x = y - (v_dot_y * pf.inv_denom_sm) * pf.z[:, None]
-            else:
-                x = _kops.thomas_constant(self.stored, rhs, **kw)
-        else:
-            uniform = s.mode == "uniform"
-            if s.mode == "batch":
-                st = self.stored
-                x = _kops.penta_batch(st["a"], st["b"], st["c"], st["d"],
-                                      st["e"], rhs, **kw)
-            elif s.periodic:
-                pf = self.stored
-                y = _kops.penta_constant(pf.factor, rhs, uniform=uniform, **kw)
-                # rank-4 Woodbury corner correction (4 x M dots)
-                w = pf.Minv @ _penta._vty(pf.vcoef, y)
-                x = y - jnp.tensordot(pf.Z, w, axes=([1], [0]))
-            else:
-                x = _kops.penta_constant(self.stored, rhs, uniform=uniform,
-                                         **kw)
-        return x[:, 0] if squeeze else x
+        from .autodiff import solve as _solve
+        from .functional import with_options
+        fact = self.fact
+        if unroll is not None:
+            fact = with_options(fact, unroll=unroll)
+        return _solve(fact, rhs)

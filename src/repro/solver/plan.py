@@ -1,4 +1,12 @@
-"""``plan(system, backend=...) -> Plan`` — the repro.solver front-end.
+"""``plan(system, backend=...) -> Plan`` — the stateful repro.solver shim.
+
+Since the transformation-native redesign the canonical API is the pure pair
+``factorize(system) -> Factorization`` / ``solve(factorization, rhs)``
+(``repro.solver.functional`` — jittable, vmappable, differentiable).
+``Plan`` remains as a thin convenience shim: it resolves the backend,
+builds the ``Factorization`` (held by the backend class as ``impl.fact``)
+and forwards ``Plan.solve`` to the same ``custom_vjp``-wrapped solve, so
+plan-based call sites get identical numerics AND gradients.
 
 ``backend`` is a registry name (``reference`` / ``pallas`` / ``sharded`` /
 any later registration) or ``"auto"``:
@@ -22,8 +30,10 @@ import dataclasses
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from .functional import ALIASES, Factorization, select_backend
 from .registry import get_backend
 from .system import BandedSystem
 
@@ -41,14 +51,24 @@ class Plan:
     backend: str
     impl: Any
 
+    @property
+    def factorization(self) -> Factorization | None:
+        """The pytree behind this plan (None for class-only backends)."""
+        return getattr(self.impl, "fact", None)
+
     def solve(self, rhs, **kw) -> jax.Array:
         """rhs: (N,) or (N, M) interleaved batch -> x of the same shape."""
         return self.impl.solve(rhs, **kw)
 
     def storage_bytes(self, *, rhs_batch: int | None = None,
-                      itemsize: int = 4) -> dict:
+                      itemsize: int | None = None) -> dict:
         """Actual bytes held by the plan's LHS state, so the paper's
-        ~75 % / ~83 % reduction claims are measured, not quoted."""
+        ~75 % / ~83 % reduction claims are measured, not quoted.
+
+        ``itemsize`` defaults to the system dtype's width (fp64 RHS batches
+        are no longer under-counted by a hardcoded 4)."""
+        if itemsize is None:
+            itemsize = jnp.dtype(self.system.dtype).itemsize
         lhs = _nbytes(self.impl.stored)
         out = {"lhs_bytes": lhs, "mode": self.system.mode,
                "n": self.system.n, "backend": self.backend}
@@ -58,16 +78,9 @@ class Plan:
         return out
 
 
-def select_backend(system: BandedSystem, *, block_m: int | None = None) -> str:
-    """The ``backend="auto"`` policy: pallas when it fits, else reference."""
-    from . import pallas as _pallas
-
-    ok, _why = _pallas.supports(system, block_m=block_m)
-    return "pallas" if ok else "reference"
-
-
-# legacy spelling used by the pre-frontend pde layer
-_ALIASES = {"core": "reference"}
+# legacy spelling used by the pre-frontend pde layer (re-exported for
+# compat; the source of truth lives in repro.solver.functional)
+_ALIASES = ALIASES
 
 
 def plan(system: BandedSystem, backend: str = "auto", **opts) -> Plan:

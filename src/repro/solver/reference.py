@@ -5,15 +5,20 @@ factor/solve logic used to live inside ``repro.core.banded``'s operators;
 it now lives here so that the deprecated operators, the ``sharded``
 backend, and the front-end all share one implementation.
 
-Three module-level functions carry the state machine so they can be reused
-outside the class (e.g. inside ``shard_map`` bodies, which need pure
-functions of (static meta, stored pytree, rhs)):
+Module-level functions carry the state machine so they can be reused
+outside the class (inside ``shard_map`` bodies and as the pure-function
+backend behind ``repro.solver.functional`` — both need pure functions of
+(static meta, stored pytree, rhs)):
 
   * ``build_stored(system)``   — factor once (constant/uniform) or tile the
     per-system LHS copies (batch).
   * ``expand_uniform(...)``    — re-broadcast the scalar diagonal of a
     uniform-mode factor back to a vector for the sweep.
   * ``solve_stored(...)``      — run the solve given meta + stored + rhs.
+  * ``transpose_solve_stored(...)`` — solve A^T x = rhs from the SAME
+    stored factor (the adjoint sweeps; DESIGN.md §5.1).  Registered as the
+    transpose hook for the ``pallas`` and ``sharded`` pure backends too,
+    since all three share the stored-factor layout.
 """
 
 from __future__ import annotations
@@ -24,12 +29,16 @@ import jax.numpy as jnp
 from repro.core import penta as _penta
 from repro.core import tridiag as _tridiag
 
-from .registry import register_backend
+from .registry import register_backend, register_pure_backend
 from .system import BandedSystem
 
 
-def build_stored(system: BandedSystem, *, method: str = "scan"):
-    """Factor (constant/uniform) or materialise per-system copies (batch)."""
+def build_stored(system: BandedSystem, *, method: str = "scan",
+                 scalarize_uniform: bool = True):
+    """Factor (constant/uniform) or materialise per-system copies (batch).
+
+    ``scalarize_uniform=False`` keeps uniform-mode factors full-vector (the
+    pallas backend wants them that way for its stacked LHS block)."""
     n, diags, dtype = system.n, system.diagonals, system.dtype
 
     if system.mode == "batch":
@@ -38,12 +47,14 @@ def build_stored(system: BandedSystem, *, method: str = "scan"):
                           + jnp.zeros((n, m), dtype))
         return {k: tile(v) for k, v in zip(system.diagonal_names, diags)}
 
+    uniform = system.mode == "uniform" and scalarize_uniform
+
     if system.bandwidth == 3:
         if system.periodic:
             f = _tridiag.periodic_thomas_factor(*diags, method=method)
         else:
             f = _tridiag.thomas_factor(*diags, method=method)
-        if system.mode == "uniform":
+        if uniform:
             # all-equal diagonals: the `a` vector inside the factor is a
             # scalar broadcast — store it as 0-d (O(2N) factor storage).
             if system.periodic:
@@ -56,7 +67,7 @@ def build_stored(system: BandedSystem, *, method: str = "scan"):
         f = _penta.periodic_penta_factor(*diags)
     else:
         f = _penta.penta_factor(*diags)
-    if system.mode == "uniform":
+    if uniform:
         # cuPentUniformBatch: drop the eps (= a) vector -> scalar.
         if system.periodic:
             f = f._replace(factor=f.factor._replace(eps=f.factor.eps[2]))
@@ -127,9 +138,108 @@ def solve_stored(bandwidth: int, mode: str, periodic: bool, n: int, stored,
     return _penta.penta_solve(f, rhs, method=method, unroll=unroll)
 
 
+def _expand_if_scalarized(bandwidth: int, periodic: bool, n: int, stored):
+    """Expand a uniform-scalarized factor; pass full factors through.
+
+    The reference backend stores uniform factors with a 0-d ``a``/``eps``
+    (the paper's O((k-1)N) saving); the pallas backend keeps them full.
+    Dispatch on the leaf rank so one transpose path serves both.
+    """
+    if bandwidth == 3:
+        leaf = stored.factor.a if periodic else stored.a
+    else:
+        leaf = stored.factor.eps if periodic else stored.eps
+    if jnp.ndim(leaf) == 0:
+        return expand_uniform(bandwidth, periodic, n, stored)
+    return stored
+
+
+def transpose_solve_stored(bandwidth: int, mode: str, periodic: bool, n: int,
+                           stored, rhs: jax.Array, *, method: str = "scan",
+                           unroll: int = 1) -> jax.Array:
+    """Solve A^T x = rhs from the SAME stored factor (the adjoint sweeps).
+
+    constant/uniform: ``repro.core.{thomas,penta}_solve_t`` — A = L·U means
+    A^T = U^T·L^T from the forward's factor vectors, so the backward pass
+    adds ZERO LHS storage.  batch mode has no stored factor (cuThomasBatch
+    semantics re-factor every call), so the transposed diagonals are formed
+    by rolling the per-system copies (the factor routines zero the entries
+    rolled across the Dirichlet boundary).
+    """
+    if mode == "batch":
+        s = stored
+        if bandwidth == 3:
+            at = jnp.roll(s["c"], 1, axis=0)
+            ct = jnp.roll(s["a"], -1, axis=0)
+            if periodic:
+                def one(a, b, c, r):
+                    pf = _tridiag.periodic_thomas_factor(a, b, c,
+                                                         method=method)
+                    return _tridiag.periodic_thomas_solve(pf, r,
+                                                          method=method)
+                return jax.vmap(one, in_axes=1, out_axes=1)(
+                    at, s["b"], ct, rhs)
+            return _tridiag.thomas_factor_solve(at, s["b"], ct, rhs,
+                                                method=method)
+        at = jnp.roll(s["e"], 2, axis=0)
+        bt = jnp.roll(s["d"], 1, axis=0)
+        dt = jnp.roll(s["b"], -1, axis=0)
+        et = jnp.roll(s["a"], -2, axis=0)
+        if periodic:
+            def one(a, b, c, d, e, r):
+                pf = _penta.periodic_penta_factor(a, b, c, d, e)
+                return _penta.periodic_penta_solve(pf, r, method=method)
+            return jax.vmap(one, in_axes=1, out_axes=1)(
+                at, bt, s["c"], dt, et, rhs)
+        return _penta.penta_factor_solve(at, bt, s["c"], dt, et, rhs,
+                                         method=method)
+
+    f = _expand_if_scalarized(bandwidth, periodic, n, stored)
+    if bandwidth == 3:
+        if periodic:
+            return _tridiag.periodic_thomas_solve_t(f, rhs, method=method,
+                                                    unroll=unroll)
+        return _tridiag.thomas_solve_t(f, rhs, method=method, unroll=unroll)
+    if periodic:
+        return _penta.periodic_penta_solve_t(f, rhs, method=method,
+                                             unroll=unroll)
+    return _penta.penta_solve_t(f, rhs, method=method, unroll=unroll)
+
+
+# -- the pure-function contract (repro.solver.functional) -------------------
+
+def _pure_build(system: BandedSystem, *, method: str = "scan",
+                unroll: int = 1, **_ignored):
+    return (build_stored(system, method=method),
+            {"method": method, "unroll": unroll})
+
+
+def _pure_solve(meta, stored, rhs):
+    return solve_stored(meta.bandwidth, meta.mode, meta.periodic, meta.n,
+                        stored, rhs, method=meta.opt("method", "scan"),
+                        unroll=meta.opt("unroll", 1))
+
+
+def _pure_transpose(meta, stored, rhs):
+    return transpose_solve_stored(meta.bandwidth, meta.mode, meta.periodic,
+                                  meta.n, stored, rhs,
+                                  method=meta.opt("method", "scan"),
+                                  unroll=meta.opt("unroll", 1))
+
+
+register_pure_backend("reference", build=_pure_build, solve=_pure_solve,
+                      transpose_solve=_pure_transpose)
+
+
 @register_backend("reference")
 class ReferenceBackend:
-    """Pure-JAX scan backend (factor once, broadcast to every RHS lane)."""
+    """Pure-JAX scan backend (factor once, broadcast to every RHS lane).
+
+    Thin shim over the pure ``factorize``/``solve`` functions: the class
+    holds a ``Factorization`` pytree and its ``solve`` routes through the
+    ``custom_vjp``-wrapped entry point, so ``plan(...).solve`` is
+    differentiable too.
+    """
 
     def __init__(self, system: BandedSystem, *, method: str = "scan",
                  unroll: int = 1, block_m=None, interpret=None, mesh=None,
@@ -137,10 +247,13 @@ class ReferenceBackend:
         # block_m / interpret / mesh are accepted (and ignored) so that
         # callers can flip `backend=` without changing the option set.
         del block_m, interpret, mesh, batch_axis
+        from .functional import factorize
         self.system = system
         self.method = method
         self.unroll = unroll
-        self.stored = build_stored(system, method=method)
+        self.fact = factorize(system, backend="reference", method=method,
+                              unroll=unroll)
+        self.stored = self.fact.stored
 
     def factor_for_solve(self):
         if self.system.mode == "uniform":
@@ -150,7 +263,9 @@ class ReferenceBackend:
 
     def solve(self, rhs: jax.Array, *, method: str | None = None,
               unroll: int | None = None) -> jax.Array:
-        s = self.system
-        return solve_stored(s.bandwidth, s.mode, s.periodic, s.n, self.stored,
-                            rhs, method=method or self.method,
-                            unroll=self.unroll if unroll is None else unroll)
+        from .autodiff import solve as _solve
+        from .functional import with_options
+        fact = self.fact
+        if method is not None or unroll is not None:
+            fact = with_options(fact, method=method, unroll=unroll)
+        return _solve(fact, rhs)

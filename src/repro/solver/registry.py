@@ -1,24 +1,74 @@
 """Backend registry for ``repro.solver``.
 
-A backend is a class with the contract::
+Two registration surfaces:
 
-    class MyBackend:
-        def __init__(self, system: BandedSystem, **opts): ...
-        stored: Any                      # factor / LHS pytree held by the plan
-        def solve(self, rhs, **kw): ...  # (N, M) or (N,) interleaved RHS -> x
+1. The *class* registry (``register_backend``) — what ``plan(...)`` resolves.
+   A backend is a class with the contract::
+
+       class MyBackend:
+           def __init__(self, system: BandedSystem, **opts): ...
+           stored: Any                      # factor / LHS pytree held by the plan
+           def solve(self, rhs, **kw): ...  # (N, M) or (N,) interleaved RHS -> x
+
+2. The *pure-function* registry (``register_pure_backend``) — what the
+   transformation-native ``factorize``/``solve`` front-end resolves
+   (``repro.solver.functional``).  A pure backend is three functions of
+   plain pytrees + static meta, so solves cross ``jit``/``vmap``/``grad``/
+   ``lax.scan`` boundaries::
+
+       build(system, **opts) -> (stored, options)   # factor once
+       solve(meta, stored, rhs) -> x                # pure, jittable
+       transpose_solve(meta, stored, rhs) -> x      # adjoint, same stored
 
 Register with::
 
     @register_backend("mybackend")
     class MyBackend: ...
 
+    register_pure_backend("mybackend", build=..., solve=...,
+                          transpose_solve=...)
+
 Later PRs (caching, async, new accelerators) plug in here without touching
-the front-end: ``plan(system, backend="mybackend")`` just works.
+the front-end: ``plan(system, backend="mybackend")`` just works, and
+registering the pure hooks makes ``factorize(system, backend="mybackend")``
+work too.
 """
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, Callable
+
 _REGISTRY: dict = {}
+_PURE_REGISTRY: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class PureBackend:
+    """The pure-function contract behind ``factorize``/``solve``."""
+
+    name: str
+    build: Callable[..., tuple]          # (system, **opts) -> (stored, options)
+    solve: Callable[..., Any]            # (meta, stored, rhs) -> x
+    transpose_solve: Callable[..., Any]  # (meta, stored, rhs) -> x  (A^T x = rhs)
+
+
+def register_pure_backend(name: str, *, build, solve, transpose_solve):
+    """Register the pure factor/solve/transpose functions for ``name``."""
+    _PURE_REGISTRY[name] = PureBackend(name=name, build=build, solve=solve,
+                                       transpose_solve=transpose_solve)
+    return _PURE_REGISTRY[name]
+
+
+def get_pure_backend(name: str) -> PureBackend:
+    try:
+        return _PURE_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"backend {name!r} has no pure factorize/solve registration; "
+            f"available: {sorted(_PURE_REGISTRY)} "
+            "(class-only backends work through plan(), not factorize())"
+        ) from None
 
 
 def register_backend(name: str):

@@ -9,6 +9,13 @@ For ``mode="batch"`` the per-system LHS copies are sharded *with* their
 systems (each device only holds the diagonals of its own slice).  The M
 axis is padded to a multiple of the mesh size with identity rows
 (``main diagonal = 1``) so padded lanes solve trivially and are sliced off.
+
+The pure-function contract: the resolved ``Mesh`` (hashable) rides in the
+``Factorization``'s static meta, so a sharded solve crosses ``jit``/``grad``
+/``lax.scan`` like any other — the ``shard_map`` is retraced only when the
+mesh itself changes.  The adjoint solve runs the replicated reference
+transposed sweeps on the same stored factor (transposed systems are just as
+independent; distributing them is a perf follow-up, not a correctness one).
 """
 
 from __future__ import annotations
@@ -18,8 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .reference import ReferenceBackend, solve_stored
-from .registry import register_backend
+from .reference import (build_stored, solve_stored, transpose_solve_stored)
+from .registry import register_backend, register_pure_backend
 from .system import BandedSystem
 
 
@@ -28,72 +35,121 @@ def default_mesh(axis_name: str = "batch") -> Mesh:
     return Mesh(np.array(jax.devices()), (axis_name,))
 
 
+def resolve_mesh(mesh: Mesh | None, batch_axis):
+    """(mesh, batch_axis, n_shards) with the defaulting rules of PR 1."""
+    if mesh is None:
+        mesh = default_mesh()
+        batch_axis = mesh.axis_names[0]
+    elif batch_axis is None:
+        batch_axis = mesh.axis_names[-1]
+    axes = batch_axis if isinstance(batch_axis, tuple) else (batch_axis,)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    return mesh, batch_axis, n_shards
+
+
+def _pad_batch(x: jax.Array, pad: int, identity: bool):
+    """Pad the M axis; per-system main-diagonal copies pad with 1 so the
+    padded lanes are identity solves (no inf/nan in dead lanes)."""
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0), (0, pad)], constant_values=1.0 if identity
+                   else 0.0)
+
+
+def sharded_solve_stored(bandwidth: int, mode: str, periodic: bool, n: int,
+                         stored, rhs: jax.Array, *, mesh: Mesh, batch_axis,
+                         n_shards: int, diagonal_names: tuple = (),
+                         method: str = "scan", unroll: int = 1) -> jax.Array:
+    """Pure shard_map dispatch given (static meta, stored pytree, rhs)."""
+    from jax.experimental.shard_map import shard_map
+
+    squeeze = rhs.ndim == 1
+    if squeeze:
+        rhs = rhs[:, None]
+    m = rhs.shape[1]
+    pad = (-m) % n_shards
+    spec = P(None, batch_axis)
+
+    if mode == "batch":
+        main = diagonal_names[bandwidth // 2]
+        padded = {k: _pad_batch(v, pad, identity=(k == main))
+                  for k, v in stored.items()}
+        fn = shard_map(
+            lambda st, r: solve_stored(bandwidth, mode, periodic, n, st, r,
+                                       method=method, unroll=unroll),
+            mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+            check_rep=False)
+        x = fn(padded, jnp.pad(rhs, [(0, 0), (0, pad)]))
+    else:
+        # replicated: closed over, one copy per device
+        fn = shard_map(
+            lambda r: solve_stored(bandwidth, mode, periodic, n, stored, r,
+                                   method=method, unroll=unroll),
+            mesh=mesh, in_specs=(spec,), out_specs=spec, check_rep=False)
+        x = fn(jnp.pad(rhs, [(0, 0), (0, pad)]))
+
+    x = x[:, :m]
+    return x[:, 0] if squeeze else x
+
+
+# -- the pure-function contract (repro.solver.functional) -------------------
+
+_TRI_NAMES = ("a", "b", "c")
+_PENTA_NAMES = ("a", "b", "c", "d", "e")
+
+
+def _pure_build(system: BandedSystem, *, mesh: Mesh | None = None,
+                batch_axis=None, method: str = "scan", unroll: int = 1,
+                **_ignored):
+    mesh, batch_axis, n_shards = resolve_mesh(mesh, batch_axis)
+    return (build_stored(system, method=method),
+            {"mesh": mesh, "batch_axis": batch_axis, "n_shards": n_shards,
+             "method": method, "unroll": unroll})
+
+
+def _pure_solve(meta, stored, rhs):
+    names = _TRI_NAMES if meta.bandwidth == 3 else _PENTA_NAMES
+    return sharded_solve_stored(
+        meta.bandwidth, meta.mode, meta.periodic, meta.n, stored, rhs,
+        mesh=meta.opt("mesh"), batch_axis=meta.opt("batch_axis"),
+        n_shards=meta.opt("n_shards"), diagonal_names=names,
+        method=meta.opt("method", "scan"), unroll=meta.opt("unroll", 1))
+
+
+def _pure_transpose(meta, stored, rhs):
+    return transpose_solve_stored(meta.bandwidth, meta.mode, meta.periodic,
+                                  meta.n, stored, rhs,
+                                  method=meta.opt("method", "scan"),
+                                  unroll=meta.opt("unroll", 1))
+
+
+register_pure_backend("sharded", build=_pure_build, solve=_pure_solve,
+                      transpose_solve=_pure_transpose)
+
+
 @register_backend("sharded")
 class ShardedBackend:
-    """shard_map-replicated-LHS over a device mesh."""
+    """shard_map-replicated-LHS over a device mesh (thin functional shim)."""
 
     def __init__(self, system: BandedSystem, *, mesh: Mesh | None = None,
                  batch_axis: str | tuple | None = None, method: str = "scan",
                  unroll: int = 1, block_m=None, interpret=None):
         del block_m, interpret  # option-set parity with other backends
+        from .functional import factorize
         self.system = system
-        self._ref = ReferenceBackend(system, method=method, unroll=unroll)
-        self.stored = self._ref.stored
-        if mesh is None:
-            mesh = default_mesh()
-            batch_axis = mesh.axis_names[0]
-        elif batch_axis is None:
-            batch_axis = mesh.axis_names[-1]
-        self.mesh = mesh
-        self.batch_axis = batch_axis
-        axes = batch_axis if isinstance(batch_axis, tuple) else (batch_axis,)
-        self.n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-
-    def _pad_batch(self, x: jax.Array, pad: int, main_diag: str | None):
-        """Pad the M axis; per-system main-diagonal copies pad with 1 so the
-        padded lanes are identity solves (no inf/nan in dead lanes)."""
-        if pad == 0:
-            return x
-        val = 1.0 if main_diag else 0.0
-        return jnp.pad(x, [(0, 0), (0, pad)], constant_values=val)
+        self.fact = factorize(system, backend="sharded", mesh=mesh,
+                              batch_axis=batch_axis, method=method,
+                              unroll=unroll)
+        self.stored = self.fact.stored
+        self.mesh = self.fact.meta.opt("mesh")
+        self.batch_axis = self.fact.meta.opt("batch_axis")
+        self.n_shards = self.fact.meta.opt("n_shards")
 
     def solve(self, rhs: jax.Array, *, method: str | None = None,
               unroll: int | None = None) -> jax.Array:
-        from jax.experimental.shard_map import shard_map
-
-        s = self.system
-        method = method or self._ref.method
-        unroll = self._ref.unroll if unroll is None else unroll
-        squeeze = rhs.ndim == 1
-        if squeeze:
-            rhs = rhs[:, None]
-        m = rhs.shape[1]
-        pad = (-m) % self.n_shards
-        spec = P(None, self.batch_axis)
-
-        if s.mode == "batch":
-            if s.batch != m:
-                raise ValueError(f"batch-mode system built for M={s.batch} "
-                                 f"but rhs has M={m}")
-            main = s.diagonal_names[s.bandwidth // 2]
-            stored = {k: self._pad_batch(v, pad, main_diag=(k == main))
-                      for k, v in self.stored.items()}
-            fn = shard_map(
-                lambda st, r: solve_stored(s.bandwidth, s.mode, s.periodic,
-                                           s.n, st, r, method=method,
-                                           unroll=unroll),
-                mesh=self.mesh, in_specs=(spec, spec), out_specs=spec,
-                check_rep=False)
-            x = fn(stored, jnp.pad(rhs, [(0, 0), (0, pad)]))
-        else:
-            stored = self.stored  # replicated: closed over, one copy/device
-            fn = shard_map(
-                lambda r: solve_stored(s.bandwidth, s.mode, s.periodic,
-                                       s.n, stored, r, method=method,
-                                       unroll=unroll),
-                mesh=self.mesh, in_specs=(spec,), out_specs=spec,
-                check_rep=False)
-            x = fn(jnp.pad(rhs, [(0, 0), (0, pad)]))
-
-        x = x[:, :m]
-        return x[:, 0] if squeeze else x
+        from .autodiff import solve as _solve
+        from .functional import with_options
+        fact = self.fact
+        if method is not None or unroll is not None:
+            fact = with_options(fact, method=method, unroll=unroll)
+        return _solve(fact, rhs)

@@ -100,6 +100,22 @@ class BandedSystem:
     def diagonal_names(self) -> tuple:
         return ("a", "b", "c") if self.bandwidth == 3 else ("a", "b", "c", "d", "e")
 
+    def transposed(self) -> "BandedSystem":
+        """The spec of A^T: diagonal k of A^T at offset ``off`` is diagonal
+        ``-off`` of A rolled by ``off`` (wrap entries land exactly on the
+        periodic corners; Dirichlet's rolled-in values sit outside the band
+        and are zeroed by the factor routines).
+
+        ``transpose_solve``/``grad`` do NOT use this — they reuse the
+        forward factorization (DESIGN.md §5.1).  This spec exists as the
+        independent oracle those paths are tested against.
+        """
+        half = self.bandwidth // 2
+        # diagonal at offset s lands at offset -s, rolled by s
+        rolled = tuple(jnp.roll(d, s, axis=0) for s, d in
+                       zip(range(-half, half + 1), self.diagonals))
+        return dataclasses.replace(self, diagonals=rolled[::-1])
+
     def describe(self) -> str:
         kind = "tridiag" if self.bandwidth == 3 else "penta"
         bc = "periodic" if self.periodic else "dirichlet"
