@@ -161,9 +161,15 @@ def bench_kernel_traffic():
     t = tri_t(n, m)
     print(f"traffic_tridiag_N{n}_M{m},0,batch/constant="
           f"{t['batch']/t['constant']:.2f}x")
+    print(f"traffic_tridiag_streamed_N{n}_M{m},0,streamed/constant="
+          f"{t['constant_streamed']/t['constant']:.2f}x_still_"
+          f"{t['batch']/t['constant_streamed']:.2f}x_under_batch")
     p = pen_t(n, m)
     print(f"traffic_penta_N{n}_M{m},0,batch/constant="
           f"{p['batch']/p['constant']:.2f}x")
+    print(f"traffic_penta_streamed_N{n}_M{m},0,streamed/constant="
+          f"{p['constant_streamed']/p['constant']:.2f}x_still_"
+          f"{p['batch']/p['constant_streamed']:.2f}x_under_batch")
     fz = fused_t(n, m)
     print(f"traffic_fused_cn_N{n}_M{m},0,unfused/fused="
           f"{fz['unfused_pipeline']/fz['fused']:.2f}x")
@@ -225,6 +231,38 @@ def bench_backends():
             t = _timeit(jax.jit(p.solve), d, reps=2)
             _record(f"solver_penta_{mode}_{backend}_N{n}_M{m}", t,
                     backend=backend, n=n, m=m, derived=f"mode={mode}")
+    bench_backends_streamed()
+
+
+def bench_backends_streamed():
+    """Large-N rows in the regime the HBM-streamed split-N kernels unlock:
+    at N=16384 the resident pallas working set exceeds the VMEM budget at
+    EVERY block_m candidate (even 128 needs 16 MiB), so before PR 3
+    ``auto`` could only fall back to reference here.  ``auto`` now
+    resolves to pallas with a streamed ``block_n`` (asserted below, so the
+    fallback cannot silently return)."""
+    from repro.solver import BandedSystem, plan
+    n, m = 16384, 1024
+    d = _rhs(n, m)
+    sigma = 0.4
+    tri = BandedSystem.tridiag(-sigma, 1 + 2 * sigma, -sigma, n=n)
+    s = 0.11
+    pen = BandedSystem.penta(s, -4 * s, 1 + 6 * s, -4 * s, s, n=n)
+    for kind, system in (("tridiag", tri), ("penta", pen)):
+        for backend in ("reference", "auto"):
+            p = plan(system, backend=backend)
+            if backend == "auto":
+                assert p.backend == "pallas", "streamed auto-select regressed"
+                block_n = p.impl.block_n
+                assert block_n is not None, "expected the streamed kernels"
+                label, derived = "pallas", f"streamed_block_n={block_n}"
+            else:
+                label, derived = backend, "mode=constant"
+            t = _timeit(jax.jit(p.solve), d, reps=2)
+            _record(f"solver_{kind}_constant_{label}_streamed_N{n}_M{m}"
+                    if backend == "auto" else
+                    f"solver_{kind}_constant_{label}_N{n}_M{m}", t,
+                    backend=label, n=n, m=m, derived=derived)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ from .ops import (
     penta_batch,
     penta_constant,
     sharded_solve,
+    solver_hbm_traffic_bytes,
     stack_penta_lhs,
     stack_tridiag_lhs,
     thomas_batch,
@@ -23,6 +24,6 @@ from .ops import (
 
 __all__ = [
     "fused_cn_penta_step", "fused_cn_step", "penta_batch", "penta_constant",
-    "sharded_solve", "stack_penta_lhs", "stack_tridiag_lhs", "thomas_batch",
-    "thomas_constant",
+    "sharded_solve", "solver_hbm_traffic_bytes", "stack_penta_lhs",
+    "stack_tridiag_lhs", "thomas_batch", "thomas_constant",
 ]

@@ -38,20 +38,58 @@ def scalar(ref, r, i):
     return ref[r:r + 1, pl.ds(i, 1)].reshape(())
 
 
-def pad_lanes(x: jax.Array, block_m: int) -> tuple[jax.Array, int]:
-    """Pad the minor (system) axis of an interleaved (N, M) batch to a
-    multiple of the lane tile. Returns (padded, original_M)."""
-    m = x.shape[-1]
-    rem = (-m) % block_m
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int, *,
+                    value: float = 0.0) -> tuple[jax.Array, int]:
+    """Pad ``axis`` of ``x`` up to a multiple of ``multiple`` with ``value``.
+    Returns (padded, original size along axis)."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
     if rem:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, rem)])
-    return x, m
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, rem)
+        x = jnp.pad(x, pads, constant_values=value)
+    return x, size
+
+
+def pad_lanes(x: jax.Array, block_m: int, *,
+              identity: bool = False) -> tuple[jax.Array, int]:
+    """Pad the minor (system) axis of an interleaved (N, M) batch to a
+    multiple of the lane tile. Returns (padded, original_M).
+
+    ``identity=True`` pads with ones instead of zeros — required for the
+    MAIN diagonal of per-system-LHS (batch mode) operands, so the dead
+    padded lanes factor as identity rows (1/1) instead of dividing by the
+    zero pad (1/0 -> inf/NaN poisoning every dead lane).  The ``sharded``
+    backend's mesh padding shares this helper for the same reason.
+    """
+    return pad_to_multiple(x, block_m, -1, value=1.0 if identity else 0.0)
+
+
+def pad_sweep(x: jax.Array, block_n: int, axis: int = 0) -> tuple[jax.Array, int]:
+    """Zero-pad the sweep (N) axis to a multiple of the streamed N-chunk.
+
+    Zero padding is exact for the *factored* constant-LHS kernels: a padded
+    row computes ``(0 - 0*carry) * 0 = 0``, so padded rows contribute
+    nothing to the forward carries and back-substitute to exactly 0 —
+    finite under ``JAX_DEBUG_NANS`` (no division happens in the solve
+    kernels; the inverses were taken at factor time)."""
+    return pad_to_multiple(x, block_n, axis)
 
 
 def vmem_working_set(n: int, block_m: int, n_rhs_blocks: int, n_lhs_vecs: int,
                      itemsize: int = 4) -> int:
     """Bytes of VMEM a solver grid step holds: RHS/out blocks + shared LHS."""
     return (n_rhs_blocks * n * block_m + n_lhs_vecs * n) * itemsize
+
+
+def streamed_vmem_working_set(block_n: int, block_m: int, n_rhs_blocks: int,
+                              n_lhs_vecs: int, n_carry: int,
+                              itemsize: int = 4) -> int:
+    """Bytes of VMEM a *streamed* (split-N) grid step holds: the N-chunked
+    RHS/out blocks + the N-chunked shared LHS + the carry rows that thread
+    the sweep state across sequential N-chunks."""
+    return (n_rhs_blocks * block_n * block_m + n_lhs_vecs * block_n
+            + n_carry * block_m) * itemsize
 
 
 def check_vmem(n: int, block_m: int, n_rhs_blocks: int, n_lhs_vecs: int,
@@ -63,3 +101,57 @@ def check_vmem(n: int, block_m: int, n_rhs_blocks: int, n_lhs_vecs: int,
             f"solver working set {ws/2**20:.1f} MiB exceeds VMEM budget "
             f"({VMEM_BUDGET_BYTES/2**20:.0f} MiB): N={n}, BLOCK_M={block_m}. "
             f"Reduce block_m or split N (HBM-streamed variant).")
+
+
+def check_vmem_streamed(block_n: int, block_m: int, n_rhs_blocks: int,
+                        n_lhs_vecs: int, n_carry: int,
+                        itemsize: int = 4) -> None:
+    ws = streamed_vmem_working_set(block_n, block_m, n_rhs_blocks, n_lhs_vecs,
+                                   n_carry, itemsize=itemsize)
+    if ws > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"streamed solver working set {ws/2**20:.1f} MiB exceeds VMEM "
+            f"budget ({VMEM_BUDGET_BYTES/2**20:.0f} MiB): BLOCK_N={block_n}, "
+            f"BLOCK_M={block_m}. Reduce block_n or block_m.")
+
+
+# -- streamed (split-N) grid plumbing ---------------------------------------
+#
+# The streamed kernels run on a 2-D grid ``(M/block_m, N/block_n)``.  The
+# LAST grid axis iterates fastest on TPU, so for a fixed lane tile j the
+# N-chunks execute sequentially — the sweep state (``dh_prev`` / the penta
+# second-order carries) lives in a small VMEM scratch that persists across
+# those grid steps.  The forward-sweep kernel walks chunks ascending in N;
+# the back-substitution kernel walks them descending (its index_map reverses
+# the chunk axis), the TPU analogue of the paper's 2-kernel pipeline.
+
+def chunk_spec(block_n: int, block_m: int, num_n: int, *,
+               reverse: bool = False):
+    """BlockSpec for an (N, M) operand chunked to (block_n, block_m) on the
+    streamed grid (j = lane tile, k = N-chunk; ``num_n`` chunks total)."""
+    if reverse:
+        return pl.BlockSpec((block_n, block_m),
+                            lambda j, k: (num_n - 1 - k, j))
+    return pl.BlockSpec((block_n, block_m), lambda j, k: (k, j))
+
+
+def chunk_lhs_spec(rows: int, block_n: int, num_n: int, *,
+                   reverse: bool = False):
+    """BlockSpec for a stacked (rows, N) shared LHS chunked along N.  Every
+    lane tile re-walks the same chunks — the single stored LHS copy of the
+    paper, streamed through VMEM instead of resident."""
+    if reverse:
+        return pl.BlockSpec((rows, block_n),
+                            lambda j, k: (0, num_n - 1 - k))
+    return pl.BlockSpec((rows, block_n), lambda j, k: (0, k))
+
+
+def reset_carry(carry_ref, k) -> None:
+    """Zero the carry scratch on the first N-chunk of each lane tile.
+
+    Zero-init makes the boundary rows fall out of the *general* recurrence
+    (e.g. ``dh_0 = (d_0 - a_0·0)·inv_0``), so the streamed kernels need no
+    first/last-row special cases and no cross-chunk peeking."""
+    @pl.when(k == 0)
+    def _():
+        carry_ref[...] = jnp.zeros_like(carry_ref)

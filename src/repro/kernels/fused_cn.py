@@ -91,8 +91,9 @@ def fused_cn_tridiag_pallas(lhs, z, params, c, *, block_m: int = 128,
     )(lhs, z, params, c)
 
 
-def hbm_traffic_bytes(n: int, m: int, itemsize: int = 4) -> dict:
+def hbm_traffic_bytes(n: int, m: int, dtype=jnp.float32) -> dict:
     """Fused vs the paper's 3-kernel pipeline (per CN step)."""
+    itemsize = jnp.dtype(dtype).itemsize
     return {
         "fused": (2 * n * m + 4 * n + 8) * itemsize,
         "unfused_pipeline": (6 * n * m + 4 * n + 8) * itemsize,

@@ -112,7 +112,8 @@ def fused_cn_penta_pallas(lhs, z, minv, params, c, *, block_m: int = 128,
     )(lhs, z, minv, params, c)
 
 
-def hbm_traffic_bytes(n: int, m: int, itemsize: int = 4) -> dict:
+def hbm_traffic_bytes(n: int, m: int, dtype=jnp.float32) -> dict:
+    itemsize = jnp.dtype(dtype).itemsize
     return {
         "fused": (2 * n * m + 9 * n + 32) * itemsize,
         "unfused_pipeline": (6 * n * m + 9 * n + 32) * itemsize,

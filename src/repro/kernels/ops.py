@@ -21,11 +21,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import (PentaFactor, PeriodicPentaFactor,
                         PeriodicTridiagFactor, TridiagFactor)
-from .common import check_vmem, default_interpret, pad_lanes
+from .common import (check_vmem, check_vmem_streamed, default_interpret,
+                     pad_lanes, pad_sweep)
 from .fused_cn import fused_cn_tridiag_pallas
 from .fused_cn_penta import fused_cn_penta_pallas
 from .penta import penta_batch_pallas, penta_constant_pallas
+from .penta_streamed import penta_constant_streamed_pallas
 from .thomas import thomas_batch_pallas, thomas_constant_pallas
+from .thomas_streamed import thomas_constant_streamed_pallas
 
 
 def stack_tridiag_lhs(f: TridiagFactor) -> jax.Array:
@@ -40,50 +43,97 @@ def stack_penta_lhs(f: PentaFactor, uniform: bool = False) -> jax.Array:
 
 
 def thomas_constant(f: TridiagFactor, d: jax.Array, *, block_m: int = 128,
-                    unroll: int = 1, interpret: bool | None = None) -> jax.Array:
-    """Constant-LHS batched Thomas solve (cuThomasConstantBatch). d: (N, M)."""
+                    block_n: int | None = None, unroll: int = 1,
+                    interpret: bool | None = None) -> jax.Array:
+    """Constant-LHS batched Thomas solve (cuThomasConstantBatch). d: (N, M).
+
+    ``block_n=None`` runs the VMEM-resident kernel (full N per grid step);
+    an integer ``block_n`` runs the HBM-streamed split-N kernel pair, which
+    lifts the VMEM wall for large N (``thomas_streamed.py``)."""
     if interpret is None:
         interpret = default_interpret()
     n = d.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=3,
-               itemsize=d.dtype.itemsize)
+    if block_n is None:
+        check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=3,
+                   itemsize=d.dtype.itemsize)
+        d_pad, m = pad_lanes(d, block_m)
+        x = thomas_constant_pallas(stack_tridiag_lhs(f), d_pad,
+                                   block_m=block_m, unroll=unroll,
+                                   interpret=interpret)
+        return x[:, :m]
+    check_vmem_streamed(block_n, block_m, n_rhs_blocks=2, n_lhs_vecs=3,
+                        n_carry=1, itemsize=d.dtype.itemsize)
+    lhs, _ = pad_sweep(stack_tridiag_lhs(f), block_n, axis=1)
     d_pad, m = pad_lanes(d, block_m)
-    x = thomas_constant_pallas(stack_tridiag_lhs(f), d_pad, block_m=block_m,
-                               unroll=unroll, interpret=interpret)
-    return x[:, :m]
+    d_pad, _ = pad_sweep(d_pad, block_n, axis=0)
+    x = thomas_constant_streamed_pallas(lhs, d_pad, block_m=block_m,
+                                        block_n=block_n, unroll=unroll,
+                                        interpret=interpret)
+    return x[:n, :m]
 
 
 def thomas_batch(a, b, c, d, *, block_m: int = 128, unroll: int = 1,
                  interpret: bool | None = None) -> jax.Array:
-    """Per-system-LHS baseline (cuThomasBatch). a/b/c/d: (N, M)."""
+    """Per-system-LHS baseline (cuThomasBatch). a/b/c/d: (N, M).
+
+    Dead padded lanes get an IDENTITY main diagonal (b = 1), not the zero
+    pad — the fused factorisation would otherwise compute 1/0 and flood
+    the padding with inf/NaN (they are sliced off, but they poison
+    ``JAX_DEBUG_NANS`` runs and waste the flush-to-zero path)."""
     if interpret is None:
         interpret = default_interpret()
     n = d.shape[0]
     check_vmem(n, block_m, n_rhs_blocks=6, n_lhs_vecs=0,
                itemsize=d.dtype.itemsize)  # 3 diag + rhs + out + scratch
     m = d.shape[1]
-    args = [pad_lanes(x, block_m)[0] for x in (a, b, c, d)]
+    args = [pad_lanes(x, block_m, identity=ident)[0]
+            for x, ident in ((a, False), (b, True), (c, False), (d, False))]
     x = thomas_batch_pallas(*args, block_m=block_m, unroll=unroll,
                             interpret=interpret)
     return x[:, :m]
 
 
+def _uniform_eps_param(f: PentaFactor, dtype) -> jax.Array:
+    """The all-equal eps value as a (1, 1) ARRAY operand.
+
+    Must stay an array end to end: ``float(f.eps[2])`` on a traced
+    ``Factorization`` leaf raises ``ConcretizationTypeError`` under
+    ``jax.jit(solve)`` / ``lax.scan`` PDE loops.  Index [2] because the
+    factor forces eps[0] = eps[1] = 0 (outside the matrix)."""
+    eps = jnp.broadcast_to(jnp.asarray(f.eps), f.beta.shape)
+    return eps[2].reshape(1, 1).astype(dtype)
+
+
 def penta_constant(f: PentaFactor, rhs: jax.Array, *, block_m: int = 128,
-                   unroll: int = 1, interpret: bool | None = None,
+                   block_n: int | None = None, unroll: int = 1,
+                   interpret: bool | None = None,
                    uniform: bool = False) -> jax.Array:
     """Constant-LHS batched penta solve (cuPentConstantBatch /
-    cuPentUniformBatch when ``uniform``)."""
+    cuPentUniformBatch when ``uniform``).  ``block_n`` selects the
+    HBM-streamed split-N kernel pair (``penta_streamed.py``)."""
     if interpret is None:
         interpret = default_interpret()
     n = rhs.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=5,
-               itemsize=rhs.dtype.itemsize)
+    eps = _uniform_eps_param(f, rhs.dtype) if uniform else None
+    lhs = stack_penta_lhs(f, uniform=uniform)
+    if block_n is None:
+        check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=5,
+                   itemsize=rhs.dtype.itemsize)
+        rhs_pad, m = pad_lanes(rhs, block_m)
+        x = penta_constant_pallas(lhs, rhs_pad, block_m=block_m,
+                                  unroll=unroll, interpret=interpret,
+                                  uniform=uniform, eps=eps)
+        return x[:, :m]
+    check_vmem_streamed(block_n, block_m, n_rhs_blocks=2, n_lhs_vecs=5,
+                        n_carry=2, itemsize=rhs.dtype.itemsize)
+    lhs, _ = pad_sweep(lhs, block_n, axis=1)
     rhs_pad, m = pad_lanes(rhs, block_m)
-    ueps = float(f.eps[2]) if uniform else None
-    x = penta_constant_pallas(stack_penta_lhs(f, uniform=uniform), rhs_pad,
-                              block_m=block_m, unroll=unroll,
-                              interpret=interpret, uniform_eps=ueps)
-    return x[:, :m]
+    rhs_pad, _ = pad_sweep(rhs_pad, block_n, axis=0)
+    x = penta_constant_streamed_pallas(lhs, rhs_pad, block_m=block_m,
+                                       block_n=block_n, unroll=unroll,
+                                       interpret=interpret, uniform=uniform,
+                                       eps=eps)
+    return x[:n, :m]
 
 
 def penta_batch(a, b, c, d, e, rhs, *, block_m: int = 128, unroll: int = 1,
@@ -94,7 +144,11 @@ def penta_batch(a, b, c, d, e, rhs, *, block_m: int = 128, unroll: int = 1,
     check_vmem(n, block_m, n_rhs_blocks=9, n_lhs_vecs=0,
                itemsize=rhs.dtype.itemsize)
     m = rhs.shape[1]
-    args = [pad_lanes(x, block_m)[0] for x in (a, b, c, d, e, rhs)]
+    # identity-pad the MAIN diagonal c (see thomas_batch): dead lanes must
+    # factor as identity rows, not divide by the zero pad.
+    args = [pad_lanes(x, block_m, identity=ident)[0]
+            for x, ident in ((a, False), (b, False), (c, True), (d, False),
+                             (e, False), (rhs, False))]
     x = penta_batch_pallas(*args, block_m=block_m, unroll=unroll,
                            interpret=interpret)
     return x[:, :m]
@@ -143,6 +197,28 @@ def fused_cn_penta_step(pf: PeriodicPentaFactor, sigma: float, c: jax.Array,
                               block_m=block_m, unroll=unroll,
                               interpret=interpret)
     return x[:, :m]
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM traffic for one solve as dispatched by this module — the
+# roofline memory term the paper's speed-up rests on, per storage mode and
+# resident-vs-streamed kernel choice.
+# ---------------------------------------------------------------------------
+
+def solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int, m: int, *,
+                             dtype=jnp.float32, streamed: bool = False) -> int:
+    """Bytes moved HBM<->VMEM by one batched solve of an (n, m) RHS."""
+    from . import penta as _penta_k
+    from . import thomas as _thomas_k
+    table = (_thomas_k if bandwidth == 3 else _penta_k).hbm_traffic_bytes(
+        n, m, dtype=dtype)
+    key = mode if mode in table else "constant"   # tridiag uniform == constant
+    if streamed:
+        key += "_streamed"
+    if key not in table:
+        raise ValueError(f"no traffic model for mode={mode!r} "
+                         f"streamed={streamed} (bandwidth {bandwidth})")
+    return table[key]
 
 
 # ---------------------------------------------------------------------------

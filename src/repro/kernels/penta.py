@@ -7,9 +7,12 @@ cuPentConstantBatch -> ``penta_constant_kernel``: shared (5, N) factored LHS
 cuPentBatch (baseline) -> ``penta_batch_kernel``: five (N, BLOCK_M) per-lane
 diagonal blocks, factorisation fused into every solve.
 
-cuPentUniformBatch -> constant kernel with a (4, N) LHS: eps is a scalar
-compiled into the kernel (all diagonal entries equal — paper §IV.C), saving
-the eps vector fetch.
+cuPentUniformBatch -> constant kernel with a (4, N) LHS: all diagonal
+entries equal (paper §IV.C), so the eps vector degenerates to one value,
+saving the eps vector fetch.  eps rides in as a (1, 1) ARRAY operand — not
+a Python float closed over by the kernel — so a traced ``Factorization``
+leaf can feed it and ``jax.jit(solve)`` never hits a
+``ConcretizationTypeError``.
 """
 
 from __future__ import annotations
@@ -27,16 +30,18 @@ from .common import row, scalar, store_row
 EPS, BETA, INV_ALPHA, GAMMA, DELTA = range(5)
 
 
-def penta_constant_kernel(lhs_ref, f_ref, x_ref, *, n: int, unroll: int,
-                          uniform_eps: float | None = None):
-    """lhs_ref: (5, N) ([4, N] when uniform); f_ref/x_ref: (N, BLOCK_M)."""
+def penta_constant_kernel(*refs, n: int, unroll: int, uniform: bool = False):
+    """refs: [eps_ref (1, 1) when uniform,] lhs_ref ((5, N), or (4, N) when
+    uniform — the eps row is dropped), f_ref/x_ref: (N, BLOCK_M)."""
+    if uniform:
+        eps_ref, lhs_ref, f_ref, x_ref = refs
+        off = -1  # uniform LHS drops the eps row
+        eps_at = lambda i: eps_ref[0, 0]
+    else:
+        lhs_ref, f_ref, x_ref = refs
+        off = 0
+        eps_at = lambda i: scalar(lhs_ref, EPS, i)
     m = f_ref.shape[1]
-    off = 0 if uniform_eps is None else -1  # uniform LHS drops the eps row
-
-    def eps_at(i):
-        if uniform_eps is not None:
-            return uniform_eps
-        return scalar(lhs_ref, EPS, i)
 
     # --- forward:  g_i = (f_i - eps_i g_{i-2} - beta_i g_{i-1}) inv_alpha_i
     g0 = row(f_ref, 0, m) * scalar(lhs_ref, INV_ALPHA + off, 0)
@@ -136,24 +141,31 @@ def _col_spec(n, block_m):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_m", "unroll", "interpret", "uniform_eps"))
+                   static_argnames=("block_m", "unroll", "interpret", "uniform"))
 def penta_constant_pallas(lhs: jax.Array, f: jax.Array, *, block_m: int = 128,
                           unroll: int = 1, interpret: bool = True,
-                          uniform_eps: float | None = None) -> jax.Array:
+                          uniform: bool = False,
+                          eps: jax.Array | None = None) -> jax.Array:
     """lhs: (5, N) [eps, beta, inv_alpha, gamma, delta] ((4, N) when
-    ``uniform_eps`` is given — the cuPentUniformBatch variant); f: (N, M)."""
+    ``uniform`` — the cuPentUniformBatch variant, with ``eps`` supplied as
+    a (1, 1) array operand); f: (N, M)."""
     n, m = f.shape
-    rows = 4 if uniform_eps is not None else 5
+    rows = 4 if uniform else 5
+    in_specs = [pl.BlockSpec((rows, n), lambda j: (0, 0)),
+                _col_spec(n, block_m)]
+    args = [lhs, f]
+    if uniform:
+        in_specs.insert(0, pl.BlockSpec((1, 1), lambda j: (0, 0)))
+        args.insert(0, eps)
     return pl.pallas_call(
         functools.partial(penta_constant_kernel, n=n, unroll=unroll,
-                          uniform_eps=uniform_eps),
+                          uniform=uniform),
         grid=(m // block_m,),
-        in_specs=[pl.BlockSpec((rows, n), lambda j: (0, 0)),
-                  _col_spec(n, block_m)],
+        in_specs=in_specs,
         out_specs=_col_spec(n, block_m),
         out_shape=jax.ShapeDtypeStruct((n, m), f.dtype),
         interpret=interpret,
-    )(lhs, f)
+    )(*args)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "unroll", "interpret"))
@@ -173,9 +185,14 @@ def penta_batch_pallas(a, b, c, d, e, f, *, block_m: int = 128,
     )(a, b, c, d, e, f)
 
 
-def hbm_traffic_bytes(n: int, m: int, itemsize: int = 4) -> dict:
+def hbm_traffic_bytes(n: int, m: int, dtype=jnp.float32) -> dict:
+    itemsize = jnp.dtype(dtype).itemsize
     return {
         "constant": (n * m * 2 + 5 * n) * itemsize,
-        "uniform": (n * m * 2 + 4 * n) * itemsize,
+        "uniform": (n * m * 2 + 4 * n + 1) * itemsize,
         "batch": (n * m * 7) * itemsize,  # 5 diagonals + RHS in, x out
+        # streamed (split-N): the intermediate g makes one HBM round trip
+        # (fwd writes it, bwd reads it) and both passes re-stream the LHS.
+        "constant_streamed": (n * m * 4 + 2 * 5 * n) * itemsize,
+        "uniform_streamed": (n * m * 4 + 2 * 4 * n + 1) * itemsize,
     }

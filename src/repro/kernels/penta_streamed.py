@@ -1,0 +1,138 @@
+"""HBM-streamed (split-N) batched pentadiagonal LR solve — constant LHS.
+
+Split-N analogue of ``penta_constant_kernel`` (see ``thomas_streamed.py``
+for the grid/carry scheme): a 2-D grid ``(M/BLOCK_M, N/BLOCK_N)`` streams
+RHS chunks through VMEM while the *second-order* sweep state — the two
+forward carries (g_{i−1}, g_{i−2}) and the two backward carries
+(x_{i+1}, x_{i+2}) — rides a ``(2, BLOCK_M)`` VMEM scratch across the
+sequential N-chunk grid steps.
+
+Boundary rows fall out of the general recurrence with zero-initialised
+carries because ``penta_factor`` forces the out-of-band entries to zero
+(a_0 = a_1 = beta_0 = 0; gamma_{N−1} = delta_{N−2} = delta_{N−1} = 0), so
+neither kernel special-cases its first/last two rows, and zero-padding N
+to a BLOCK_N multiple is exact and NaN-free.
+
+The cuPentUniformBatch variant (all-equal diagonals) drops the eps row
+from the streamed LHS — (4, BLOCK_N) chunks — and reads eps from a (1, 1)
+parameter block instead.  eps arrives as an ARRAY operand, never a Python
+float baked into the kernel closure, so uniform-mode solves stay jittable
+with a traced ``Factorization`` (no ``ConcretizationTypeError`` inside
+``jax.jit``/``lax.scan``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import (chunk_lhs_spec, chunk_spec, reset_carry, row, scalar,
+                     store_row)
+from .penta import BETA, DELTA, EPS, GAMMA, INV_ALPHA
+
+
+def penta_streamed_fwd_kernel(*refs, block_n: int, unroll: int,
+                              uniform: bool):
+    """Forward L-sweep over ascending chunks.
+
+    refs (uniform): eps_ref (1, 1), lhs_ref (4, BLOCK_N), f_ref, g_ref,
+    carry_ref (2, BLOCK_M) = [g_{i−1}, g_{i−2}].
+    refs (full): lhs_ref (5, BLOCK_N), f_ref, g_ref, carry_ref."""
+    if uniform:
+        eps_ref, lhs_ref, f_ref, g_ref, carry_ref = refs
+        off = -1
+        eps_at = lambda i: eps_ref[0, 0]
+    else:
+        lhs_ref, f_ref, g_ref, carry_ref = refs
+        off = 0
+        eps_at = lambda i: scalar(lhs_ref, EPS, i)
+    m = f_ref.shape[1]
+    reset_carry(carry_ref, pl.program_id(1))
+
+    def fwd(i, carry):
+        gm1, gm2 = carry
+        g = (row(f_ref, i, m) - eps_at(i) * gm2
+             - scalar(lhs_ref, BETA + off, i) * gm1) \
+            * scalar(lhs_ref, INV_ALPHA + off, i)
+        store_row(g_ref, i, g)
+        return g, gm1
+
+    gm1, gm2 = jax.lax.fori_loop(
+        0, block_n, fwd, (row(carry_ref, 0, m), row(carry_ref, 1, m)),
+        unroll=unroll)
+    store_row(carry_ref, 0, gm1)
+    store_row(carry_ref, 1, gm2)
+
+
+def penta_streamed_bwd_kernel(lhs_ref, g_ref, x_ref, carry_ref, *,
+                              block_n: int, unroll: int, uniform: bool):
+    """Backward R-sweep over descending chunks; carry = [x_{i+1}, x_{i+2}]."""
+    off = -1 if uniform else 0
+    m = g_ref.shape[1]
+    reset_carry(carry_ref, pl.program_id(1))
+
+    def bwd(t, carry):
+        xp1, xp2 = carry
+        i = block_n - 1 - t
+        x_i = (row(g_ref, i, m)
+               - scalar(lhs_ref, GAMMA + off, i) * xp1
+               - scalar(lhs_ref, DELTA + off, i) * xp2)
+        store_row(x_ref, i, x_i)
+        return x_i, xp1
+
+    xp1, xp2 = jax.lax.fori_loop(
+        0, block_n, bwd, (row(carry_ref, 0, m), row(carry_ref, 1, m)),
+        unroll=unroll)
+    store_row(carry_ref, 0, xp1)
+    store_row(carry_ref, 1, xp2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "unroll",
+                                    "interpret", "uniform"))
+def penta_constant_streamed_pallas(lhs: jax.Array, f: jax.Array, *,
+                                   block_m: int = 128, block_n: int = 512,
+                                   unroll: int = 1, interpret: bool = True,
+                                   uniform: bool = False,
+                                   eps: jax.Array | None = None) -> jax.Array:
+    """lhs: (5, N) [eps, beta, inv_alpha, gamma, delta] — (4, N) without the
+    eps row when ``uniform`` (then ``eps`` is a (1, 1) array operand);
+    f: (N, M).  Requires N % block_n == 0 and M % block_m == 0."""
+    n, m = f.shape
+    rows = 4 if uniform else 5
+    num_n = n // block_n
+    grid = (m // block_m, num_n)
+    carry = [pltpu.VMEM((2, block_m), f.dtype)]
+
+    fwd_specs = [chunk_lhs_spec(rows, block_n, num_n),
+                 chunk_spec(block_n, block_m, num_n)]
+    fwd_args = [lhs, f]
+    if uniform:
+        fwd_specs.insert(0, pl.BlockSpec((1, 1), lambda j, k: (0, 0)))
+        fwd_args.insert(0, eps)
+
+    g = pl.pallas_call(
+        functools.partial(penta_streamed_fwd_kernel, block_n=block_n,
+                          unroll=unroll, uniform=uniform),
+        grid=grid,
+        in_specs=fwd_specs,
+        out_specs=chunk_spec(block_n, block_m, num_n),
+        out_shape=jax.ShapeDtypeStruct((n, m), f.dtype),
+        scratch_shapes=carry,
+        interpret=interpret,
+    )(*fwd_args)
+
+    return pl.pallas_call(
+        functools.partial(penta_streamed_bwd_kernel, block_n=block_n,
+                          unroll=unroll, uniform=uniform),
+        grid=grid,
+        in_specs=[chunk_lhs_spec(rows, block_n, num_n, reverse=True),
+                  chunk_spec(block_n, block_m, num_n, reverse=True)],
+        out_specs=chunk_spec(block_n, block_m, num_n, reverse=True),
+        out_shape=jax.ShapeDtypeStruct((n, m), f.dtype),
+        scratch_shapes=carry,
+        interpret=interpret,
+    )(lhs, g)

@@ -135,11 +135,19 @@ def thomas_batch_pallas(a, b, c, d, *, block_m: int = 128,
     )(a, b, c, d)
 
 
-def hbm_traffic_bytes(n: int, m: int, itemsize: int = 4) -> dict:
+def hbm_traffic_bytes(n: int, m: int, dtype=jnp.float32) -> dict:
     """Analytic HBM<->VMEM traffic — the quantity the paper's speed-up comes
-    from (roofline memory term for these bandwidth-bound kernels)."""
+    from (roofline memory term for these bandwidth-bound kernels).
+    ``itemsize`` derives from the actual dtype (fp64 runs are no longer
+    under-counted by a hardcoded 4)."""
+    itemsize = jnp.dtype(dtype).itemsize
     return {
         "constant": (n * m * 2 + 3 * n) * itemsize,      # RHS in + x out + LHS once/block*
         "batch": (n * m * 5) * itemsize,                 # 3 diagonals + RHS in, x out
+        # streamed (split-N, thomas_streamed.py): the intermediate d_hat
+        # makes one extra HBM round trip (fwd pass writes it, bwd pass reads
+        # it) and both passes re-stream the shared LHS — 2x the resident
+        # constant traffic, still < the 5 N M per-system baseline.
+        "constant_streamed": (n * m * 4 + 2 * 3 * n) * itemsize,
         # *the shared LHS re-fetch is once per grid block, negligible for M >> block
     }

@@ -114,19 +114,22 @@ jax.tree_util.register_dataclass(
 )
 
 
-def select_backend(system: BandedSystem, *, block_m: int | None = None) -> str:
-    """The ``backend="auto"`` policy: pallas when it fits, else reference."""
+def select_backend(system: BandedSystem, *, block_m: int | None = None,
+                   block_n: int | None = None) -> str:
+    """The ``backend="auto"`` policy: pallas when it fits (resident OR
+    HBM-streamed split-N), else reference."""
     from . import pallas as _pallas
 
-    ok, _why = _pallas.supports(system, block_m=block_m)
+    ok, _why = _pallas.supports(system, block_m=block_m, block_n=block_n)
     return "pallas" if ok else "reference"
 
 
 def resolve_backend_name(system: BandedSystem, backend: str,
-                         block_m: int | None = None) -> str:
+                         block_m: int | None = None,
+                         block_n: int | None = None) -> str:
     backend = ALIASES.get(backend, backend)
     if backend == "auto":
-        backend = select_backend(system, block_m=block_m)
+        backend = select_backend(system, block_m=block_m, block_n=block_n)
     return backend
 
 
@@ -135,12 +138,14 @@ def factorize(system: BandedSystem, backend: str = "auto",
     """Factor ``system`` once into a transformation-crossing pytree.
 
     ``backend`` is a pure-registry name (``reference`` / ``pallas`` /
-    ``sharded``) or ``"auto"`` (pallas when the kernel working set fits
-    VMEM, else reference).  Backend options (``method``, ``unroll``,
-    ``block_m``, ``interpret``, ``mesh``, ``batch_axis``) are resolved here
-    — at trace time — and frozen into the static meta.
+    ``sharded``) or ``"auto"`` (pallas when the kernel fits — VMEM-resident
+    or HBM-streamed split-N — else reference).  Backend options
+    (``method``, ``unroll``, ``block_m``, ``block_n``, ``interpret``,
+    ``mesh``, ``batch_axis``) are resolved here — at trace time — and
+    frozen into the static meta.
     """
-    backend = resolve_backend_name(system, backend, opts.get("block_m"))
+    backend = resolve_backend_name(system, backend, opts.get("block_m"),
+                                   opts.get("block_n"))
     pure = get_pure_backend(backend)
     stored, options = pure.build(system, **opts)
     meta = SolveMeta(bandwidth=system.bandwidth, n=system.n,

@@ -1,17 +1,22 @@
 """``pallas`` backend: the interleaved Pallas TPU kernels from
-``repro.kernels``, with VMEM-aware ``block_m`` auto-tuning.
+``repro.kernels``, with VMEM-aware ``(block_m, block_n)`` auto-tuning.
 
 Layout (DESIGN.md §2): the system index M rides the 128-wide lane axis
 (one system per lane — the paper's one system per CUDA thread), the
 unknown index N is the sequential sweep axis, and the shared LHS sits in a
 single VMEM block whose index_map is constant across the grid.
 
-``block_m`` auto-tuning: the largest lane-tile from ``_BLOCK_M_CANDIDATES``
-whose working set (``vmem_working_set``) fits the VMEM budget is chosen, so
-bigger batches amortise the shared-LHS block over more lanes without
-tripping ``check_vmem``.  ``supports()`` reports whether a system can run
-on this backend at all — ``plan(backend="auto")`` consults it and falls
-back to ``reference`` instead of raising.
+Auto-tuning is a 2-D search (DESIGN.md §2.1).  The resident kernels
+(``block_n=None``) are preferred — one pass, minimum HBM traffic — at the
+largest lane tile from ``_BLOCK_M_CANDIDATES`` whose working set
+(``vmem_working_set``) fits the VMEM budget.  When no resident tile fits
+(N too large), constant/uniform systems fall through to the HBM-streamed
+split-N kernels (``thomas_streamed`` / ``penta_streamed``): the largest
+``(block_m, block_n)`` pair whose *chunked* working set fits.  The VMEM
+wall therefore no longer caps N — ``supports()`` keeps returning True and
+``plan(backend="auto")`` keeps picking pallas at any N the HBM holds;
+only per-system-LHS (batch) solves still hit the wall (streaming their
+five per-lane diagonal blocks is an open item, see ROADMAP).
 
 Periodic boundaries: the kernels solve the truncated band; the rank-1
 Sherman-Morrison (tridiag) / rank-4 Woodbury (penta) corner corrections are
@@ -32,6 +37,7 @@ from .registry import register_backend, register_pure_backend
 from .system import BandedSystem
 
 _BLOCK_M_CANDIDATES = (1024, 512, 256, 128)
+_BLOCK_N_CANDIDATES = (2048, 1024, 512, 256)
 
 
 def _vmem_counts(system: BandedSystem) -> tuple:
@@ -42,15 +48,30 @@ def _vmem_counts(system: BandedSystem) -> tuple:
     return (9, 0) if system.mode == "batch" else (2, 5)
 
 
+def _carry_rows(system: BandedSystem) -> int:
+    """Sweep-state rows the streamed kernels carry across N-chunks."""
+    return 1 if system.bandwidth == 3 else 2
+
+
+def _can_stream(system: BandedSystem) -> bool:
+    # batch mode fuses the factorisation over per-lane LHS copies held in
+    # VMEM scratch; streaming those is an open item (ROADMAP).
+    return system.mode != "batch"
+
+
+def _lane_cap(system: BandedSystem) -> int | None:
+    if system.batch is None:
+        return None
+    # no point tiling wider than the (lane-padded) batch itself
+    return -(-system.batch // _kcommon.LANE) * _kcommon.LANE
+
+
 def auto_block_m(system: BandedSystem) -> int | None:
-    """Largest candidate lane tile whose working set fits the VMEM budget
-    (None if even the smallest does not fit)."""
+    """Largest candidate lane tile whose RESIDENT (full-N) working set fits
+    the VMEM budget (None if even the smallest does not fit)."""
     n_rhs, n_lhs = _vmem_counts(system)
     itemsize = jnp.dtype(system.dtype).itemsize
-    cap = None
-    if system.batch is not None:
-        # no point tiling wider than the (lane-padded) batch itself
-        cap = -(-system.batch // _kcommon.LANE) * _kcommon.LANE
+    cap = _lane_cap(system)
     for bm in _BLOCK_M_CANDIDATES:
         if cap is not None and bm > max(cap, _BLOCK_M_CANDIDATES[-1]):
             continue
@@ -61,31 +82,96 @@ def auto_block_m(system: BandedSystem) -> int | None:
     return None
 
 
-def supports(system: BandedSystem, *, block_m: int | None = None) -> tuple:
+def _streamed_fits(system: BandedSystem, block_m: int, block_n: int) -> bool:
+    n_rhs, n_lhs = _vmem_counts(system)
+    ws = _kcommon.streamed_vmem_working_set(
+        block_n, block_m, n_rhs, n_lhs, _carry_rows(system),
+        itemsize=jnp.dtype(system.dtype).itemsize)
+    return ws <= _kcommon.VMEM_BUDGET_BYTES
+
+
+def auto_block_n(system: BandedSystem, block_m: int) -> int | None:
+    """Largest streamed N-chunk that fits the budget at ``block_m`` (None
+    if even the smallest does not fit, or the mode cannot stream)."""
+    if not _can_stream(system):
+        return None
+    for bn in _BLOCK_N_CANDIDATES:
+        if _streamed_fits(system, block_m, bn):
+            return bn
+    return None
+
+
+def auto_tune(system: BandedSystem, *, block_m: int | None = None,
+              block_n: int | None = None) -> tuple | None:
+    """Resolve ``(block_m, block_n)``; ``block_n=None`` means resident.
+
+    Resident is preferred (one pass, half the RHS traffic); the streamed
+    split-N pair is the fallback that lifts the VMEM wall.  Explicit user
+    choices are honoured when they fit, never silently overridden."""
+    n_rhs, n_lhs = _vmem_counts(system)
+    itemsize = jnp.dtype(system.dtype).itemsize
+    if block_n is not None:
+        # explicit streaming request
+        if not _can_stream(system):
+            return None
+        for bm in ((block_m,) if block_m is not None else _BLOCK_M_CANDIDATES):
+            if _streamed_fits(system, bm, block_n):
+                return bm, block_n
+        return None
+    if block_m is not None:
+        ws = _kcommon.vmem_working_set(system.n, block_m, n_rhs, n_lhs,
+                                       itemsize=itemsize)
+        if ws <= _kcommon.VMEM_BUDGET_BYTES:
+            return block_m, None
+        bn = auto_block_n(system, block_m)
+        return (block_m, bn) if bn is not None else None
+    bm = auto_block_m(system)
+    if bm is not None:
+        return bm, None
+    cap = _lane_cap(system)
+    for bm in _BLOCK_M_CANDIDATES:
+        if cap is not None and bm > max(cap, _BLOCK_M_CANDIDATES[-1]):
+            continue
+        bn = auto_block_n(system, bm)
+        if bn is not None:
+            return bm, bn
+    return None
+
+
+def supports(system: BandedSystem, *, block_m: int | None = None,
+             block_n: int | None = None) -> tuple:
     """(ok, reason). Used by ``plan(backend="auto")`` for fallback."""
     if system.periodic and system.mode == "batch":
         return False, ("no Pallas kernel for periodic per-system-LHS solves; "
                        "use backend='reference'")
-    n_rhs, n_lhs = _vmem_counts(system)
-    itemsize = jnp.dtype(system.dtype).itemsize
-    if block_m is not None:
-        # an explicit block_m must itself fit, or auto would pick pallas
-        # only to have check_vmem raise at solve time
-        ws = _kcommon.vmem_working_set(system.n, block_m, n_rhs, n_lhs,
-                                       itemsize=itemsize)
-        if ws > _kcommon.VMEM_BUDGET_BYTES:
-            return False, (f"working set {ws / 2**20:.1f} MiB at block_m="
-                           f"{block_m} exceeds VMEM budget "
-                           f"({_kcommon.VMEM_BUDGET_BYTES / 2**20:.0f} MiB)")
-        return True, f"block_m={block_m}"
-    bm = auto_block_m(system)
-    if bm is None:
-        ws = _kcommon.vmem_working_set(system.n, _BLOCK_M_CANDIDATES[-1],
-                                       n_rhs, n_lhs, itemsize=itemsize)
-        return False, (f"working set {ws / 2**20:.1f} MiB at block_m="
-                       f"{_BLOCK_M_CANDIDATES[-1]} exceeds VMEM budget "
-                       f"({_kcommon.VMEM_BUDGET_BYTES / 2**20:.0f} MiB)")
-    return True, f"block_m={bm}"
+    tuned = auto_tune(system, block_m=block_m, block_n=block_n)
+    if tuned is None:
+        n_rhs, n_lhs = _vmem_counts(system)
+        itemsize = jnp.dtype(system.dtype).itemsize
+        bm = block_m if block_m is not None else _BLOCK_M_CANDIDATES[-1]
+        if block_n is not None and _can_stream(system):
+            # the failing candidate was an explicit streamed request —
+            # report the streamed chunk working set, not the resident one
+            ws = _kcommon.streamed_vmem_working_set(
+                block_n, bm, n_rhs, n_lhs, _carry_rows(system),
+                itemsize=itemsize)
+            desc = (f"streamed working set {ws / 2**20:.1f} MiB at "
+                    f"block_n={block_n}")
+            extra = ""
+        else:
+            ws = _kcommon.vmem_working_set(system.n, bm, n_rhs, n_lhs,
+                                           itemsize=itemsize)
+            desc = f"working set {ws / 2**20:.1f} MiB"
+            extra = ("; streamed split-N kernels for per-system-LHS (batch) "
+                     "solves are not implemented" if not _can_stream(system)
+                     else "; no streamed (block_m, block_n) pair fits either")
+        return False, (f"{desc} exceeds VMEM budget "
+                       f"({_kcommon.VMEM_BUDGET_BYTES / 2**20:.0f} "
+                       f"MiB){extra}")
+    bm, bn = tuned
+    if bn is None:
+        return True, f"block_m={bm}"
+    return True, f"streamed block_m={bm} block_n={bn}"
 
 
 def build_stored(system: BandedSystem):
@@ -98,9 +184,13 @@ def build_stored(system: BandedSystem):
 
 
 def solve_stored(bandwidth: int, mode: str, periodic: bool, stored,
-                 rhs: jax.Array, *, block_m: int, unroll: int = 1,
+                 rhs: jax.Array, *, block_m: int, block_n: int | None = None,
+                 unroll: int = 1,
                  interpret: bool | None = None) -> jax.Array:
-    """Pure kernel dispatch given (static meta, stored pytree, rhs)."""
+    """Pure kernel dispatch given (static meta, stored pytree, rhs).
+
+    ``block_n=None`` dispatches the VMEM-resident kernels; an integer
+    selects the HBM-streamed split-N pair (constant/uniform modes)."""
     squeeze = rhs.ndim == 1
     if squeeze:
         rhs = rhs[:, None]
@@ -109,6 +199,7 @@ def solve_stored(bandwidth: int, mode: str, periodic: bool, stored,
     m_pad = -(-rhs.shape[1] // _kcommon.LANE) * _kcommon.LANE
     kw = dict(block_m=min(block_m, max(m_pad, _kcommon.LANE)),
               interpret=interpret, unroll=unroll)
+    skw = dict(kw, block_n=block_n)
 
     if bandwidth == 3:
         if mode == "batch":
@@ -116,12 +207,12 @@ def solve_stored(bandwidth: int, mode: str, periodic: bool, stored,
                                    rhs, **kw)
         elif periodic:
             pf = stored
-            y = _kops.thomas_constant(pf.factor, rhs, **kw)
+            y = _kops.thomas_constant(pf.factor, rhs, **skw)
             # rank-1 Sherman-Morrison corner correction (paper Eq. 15)
             v_dot_y = y[0] + pf.v_last * y[-1]
             x = y - (v_dot_y * pf.inv_denom_sm) * pf.z[:, None]
         else:
-            x = _kops.thomas_constant(stored, rhs, **kw)
+            x = _kops.thomas_constant(stored, rhs, **skw)
     else:
         uniform = mode == "uniform"
         if mode == "batch":
@@ -129,31 +220,37 @@ def solve_stored(bandwidth: int, mode: str, periodic: bool, stored,
                                   stored["d"], stored["e"], rhs, **kw)
         elif periodic:
             pf = stored
-            y = _kops.penta_constant(pf.factor, rhs, uniform=uniform, **kw)
+            y = _kops.penta_constant(pf.factor, rhs, uniform=uniform, **skw)
             # rank-4 Woodbury corner correction (4 x M dots)
             w = pf.Minv @ _penta._vty(pf.vcoef, y)
             x = y - jnp.tensordot(pf.Z, w, axes=([1], [0]))
         else:
-            x = _kops.penta_constant(stored, rhs, uniform=uniform, **kw)
+            x = _kops.penta_constant(stored, rhs, uniform=uniform, **skw)
     return x[:, 0] if squeeze else x
 
 
 # -- the pure-function contract (repro.solver.functional) -------------------
 
 def _pure_build(system: BandedSystem, *, block_m: int | None = None,
-                unroll: int = 1, interpret: bool | None = None, **_ignored):
-    ok, why = supports(system, block_m=block_m)
-    if not ok:
+                block_n: int | None = None, unroll: int = 1,
+                interpret: bool | None = None, **_ignored):
+    no_kernel = system.periodic and system.mode == "batch"
+    tuned = None if no_kernel else auto_tune(system, block_m=block_m,
+                                             block_n=block_n)
+    if tuned is None:
+        _, why = supports(system, block_m=block_m, block_n=block_n)
         raise NotImplementedError(
             f"pallas backend cannot run {system.describe()}: {why}")
-    resolved = block_m if block_m is not None else auto_block_m(system)
+    bm, bn = tuned
     return (build_stored(system),
-            {"block_m": resolved, "unroll": unroll, "interpret": interpret})
+            {"block_m": bm, "block_n": bn, "unroll": unroll,
+             "interpret": interpret})
 
 
 def _pure_solve(meta, stored, rhs):
     return solve_stored(meta.bandwidth, meta.mode, meta.periodic, stored, rhs,
                         block_m=meta.opt("block_m"),
+                        block_n=meta.opt("block_n"),
                         unroll=meta.opt("unroll", 1),
                         interpret=meta.opt("interpret"))
 
@@ -181,14 +278,17 @@ class PallasBackend:
     """
 
     def __init__(self, system: BandedSystem, *, block_m: int | None = None,
-                 unroll: int = 1, interpret: bool | None = None,
+                 block_n: int | None = None, unroll: int = 1,
+                 interpret: bool | None = None,
                  method=None, mesh=None, batch_axis=None):
         del method, mesh, batch_axis  # option-set parity with other backends
         from .functional import factorize
         self.system = system
         self.fact = factorize(system, backend="pallas", block_m=block_m,
-                              unroll=unroll, interpret=interpret)
+                              block_n=block_n, unroll=unroll,
+                              interpret=interpret)
         self.block_m = self.fact.meta.opt("block_m")
+        self.block_n = self.fact.meta.opt("block_n")
         self.unroll = unroll
         self.interpret = interpret
         self.stored = self.fact.stored

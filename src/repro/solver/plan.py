@@ -91,6 +91,7 @@ def plan(system: BandedSystem, backend: str = "auto", **opts) -> Plan:
     """
     backend = _ALIASES.get(backend, backend)
     if backend == "auto":
-        backend = select_backend(system, block_m=opts.get("block_m"))
+        backend = select_backend(system, block_m=opts.get("block_m"),
+                                 block_n=opts.get("block_n"))
     impl = get_backend(backend)(system, **opts)
     return Plan(system=system, backend=backend, impl=impl)

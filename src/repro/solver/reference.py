@@ -242,11 +242,11 @@ class ReferenceBackend:
     """
 
     def __init__(self, system: BandedSystem, *, method: str = "scan",
-                 unroll: int = 1, block_m=None, interpret=None, mesh=None,
-                 batch_axis=None):
-        # block_m / interpret / mesh are accepted (and ignored) so that
-        # callers can flip `backend=` without changing the option set.
-        del block_m, interpret, mesh, batch_axis
+                 unroll: int = 1, block_m=None, block_n=None, interpret=None,
+                 mesh=None, batch_axis=None):
+        # block_m / block_n / interpret / mesh are accepted (and ignored) so
+        # that callers can flip `backend=` without changing the option set.
+        del block_m, block_n, interpret, mesh, batch_axis
         from .functional import factorize
         self.system = system
         self.method = method

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels.common import pad_lanes
+
 from .reference import (build_stored, solve_stored, transpose_solve_stored)
 from .registry import register_backend, register_pure_backend
 from .system import BandedSystem
@@ -47,46 +49,40 @@ def resolve_mesh(mesh: Mesh | None, batch_axis):
     return mesh, batch_axis, n_shards
 
 
-def _pad_batch(x: jax.Array, pad: int, identity: bool):
-    """Pad the M axis; per-system main-diagonal copies pad with 1 so the
-    padded lanes are identity solves (no inf/nan in dead lanes)."""
-    if pad == 0:
-        return x
-    return jnp.pad(x, [(0, 0), (0, pad)], constant_values=1.0 if identity
-                   else 0.0)
-
-
 def sharded_solve_stored(bandwidth: int, mode: str, periodic: bool, n: int,
                          stored, rhs: jax.Array, *, mesh: Mesh, batch_axis,
                          n_shards: int, diagonal_names: tuple = (),
                          method: str = "scan", unroll: int = 1) -> jax.Array:
-    """Pure shard_map dispatch given (static meta, stored pytree, rhs)."""
+    """Pure shard_map dispatch given (static meta, stored pytree, rhs).
+
+    Padding the M axis to the mesh size uses the kernels' shared
+    ``pad_lanes``: per-system MAIN-diagonal copies identity-pad (b = 1) so
+    the dead padded lanes factor as identity solves instead of 1/0."""
     from jax.experimental.shard_map import shard_map
 
     squeeze = rhs.ndim == 1
     if squeeze:
         rhs = rhs[:, None]
     m = rhs.shape[1]
-    pad = (-m) % n_shards
     spec = P(None, batch_axis)
 
     if mode == "batch":
         main = diagonal_names[bandwidth // 2]
-        padded = {k: _pad_batch(v, pad, identity=(k == main))
+        padded = {k: pad_lanes(v, n_shards, identity=(k == main))[0]
                   for k, v in stored.items()}
         fn = shard_map(
             lambda st, r: solve_stored(bandwidth, mode, periodic, n, st, r,
                                        method=method, unroll=unroll),
             mesh=mesh, in_specs=(spec, spec), out_specs=spec,
             check_rep=False)
-        x = fn(padded, jnp.pad(rhs, [(0, 0), (0, pad)]))
+        x = fn(padded, pad_lanes(rhs, n_shards)[0])
     else:
         # replicated: closed over, one copy per device
         fn = shard_map(
             lambda r: solve_stored(bandwidth, mode, periodic, n, stored, r,
                                    method=method, unroll=unroll),
             mesh=mesh, in_specs=(spec,), out_specs=spec, check_rep=False)
-        x = fn(jnp.pad(rhs, [(0, 0), (0, pad)]))
+        x = fn(pad_lanes(rhs, n_shards)[0])
 
     x = x[:, :m]
     return x[:, 0] if squeeze else x
@@ -133,8 +129,8 @@ class ShardedBackend:
 
     def __init__(self, system: BandedSystem, *, mesh: Mesh | None = None,
                  batch_axis: str | tuple | None = None, method: str = "scan",
-                 unroll: int = 1, block_m=None, interpret=None):
-        del block_m, interpret  # option-set parity with other backends
+                 unroll: int = 1, block_m=None, block_n=None, interpret=None):
+        del block_m, block_n, interpret  # option-set parity with other backends
         from .functional import factorize
         self.system = system
         self.fact = factorize(system, backend="sharded", mesh=mesh,
