@@ -206,20 +206,29 @@ def _corner_V(vcoef: jax.Array, n: int) -> jax.Array:
              .at[0, 3].set(dN1).at[1, 3].set(eN1))
 
 
-def periodic_penta_solve_t(pf: PeriodicPentaFactor, g: jax.Array, *,
-                           method: str = "scan", unroll: int = 1) -> jax.Array:
-    """Transposed periodic penta solve P^T x = g from the SAME stored factor.
+def periodic_corner_correction_t(pf: PeriodicPentaFactor,
+                                 y: jax.Array) -> jax.Array:
+    """Transposed rank-4 Woodbury corner step on y = A'^{-T} g.
 
     P = A' + U V^T, so P^T = A'^T + V U^T and Woodbury gives
         x = y - Zt (I + U^T A'^{-T} V)^{-1} U^T y,
-    with y = A'^{-T} g and Zt = A'^{-T} V (solved once at factor time, like
-    the forward's Z).  Since U^T A'^{-T} V = (V^T Z)^T, the 4x4 inverse is
-    just the stored ``Minv`` transposed — the adjoint needs no second LHS.
+    with Zt = A'^{-T} V (solved once at factor time, like the forward's
+    Z).  Since U^T A'^{-T} V = (V^T Z)^T, the 4x4 inverse is just the
+    stored ``Minv`` transposed — the adjoint needs no second LHS.  Shared
+    by the reference transposed solve below and the ``pallas`` backend's
+    kernel-produced y — ONE home for the corner algebra.
     """
-    y = penta_solve_t(pf.factor, g, method=method, unroll=unroll)
     uty = jnp.stack([y[0], y[1], y[-2], y[-1]], axis=0)            # U^T y
     h = pf.Minv.T @ uty
     return y - jnp.tensordot(pf.Zt, h, axes=([1], [0]))
+
+
+def periodic_penta_solve_t(pf: PeriodicPentaFactor, g: jax.Array, *,
+                           method: str = "scan", unroll: int = 1) -> jax.Array:
+    """Transposed periodic penta solve P^T x = g from the SAME stored
+    factor (see ``periodic_corner_correction_t`` for the corner algebra)."""
+    y = penta_solve_t(pf.factor, g, method=method, unroll=unroll)
+    return periodic_corner_correction_t(pf, y)
 
 
 def dense_penta(a, b, c, d, e, periodic: bool = False) -> jax.Array:

@@ -193,28 +193,36 @@ def periodic_thomas_solve(pf: PeriodicTridiagFactor, d: jax.Array, *,
     return y - corr * z
 
 
-def periodic_thomas_solve_t(pf: PeriodicTridiagFactor, g: jax.Array, *,
-                            method: str = "scan", unroll: int = 1) -> jax.Array:
-    """Transposed periodic solve A^T x = g from the SAME stored factor.
+def periodic_corner_correction_t(pf: PeriodicTridiagFactor,
+                                 y: jax.Array) -> jax.Array:
+    """Transposed Sherman-Morrison corner step on y = A'^{-T} g.
 
     A = A' + u v^T, so A^T = A'^T + v u^T and Sherman-Morrison gives
         x = y - (u . y) / (1 + u . w) * w,
-    with y = A'^{-T} g and w = A'^{-T} v = ``pf.zt`` (solved once at factor
-    time, exactly like the forward's z).  The denominator 1 + u.w = 1 + v.z
-    is the stored ``inv_denom_sm`` (scalar transpose); and u is recovered
-    from the factor itself (gamma = -b_0 = -1/(2 inv_denom_0), c_{N-1} =
+    with w = A'^{-T} v = ``pf.zt`` (solved once at factor time, exactly
+    like the forward's z).  The denominator 1 + u.w = 1 + v.z is the
+    stored ``inv_denom_sm`` (scalar transpose); and u is recovered from
+    the factor itself (gamma = -b_0 = -1/(2 inv_denom_0), c_{N-1} =
     c_hat_{N-1} / inv_denom_{N-1}) — no second LHS copy anywhere in the
-    adjoint.
+    adjoint.  Shared by the reference transposed solve below and the
+    ``pallas`` backend, whose kernels produce the same y — ONE home for
+    the factor-convention algebra.
     """
     f = pf.factor
-    y = thomas_solve_t(f, g, method=method, unroll=unroll)
-
     gamma = -0.5 / f.inv_denom[0]
     c_last = f.c_hat[-1] / f.inv_denom[-1]
     u_dot_y = gamma * y[0] + c_last * y[-1]
     corr = u_dot_y * pf.inv_denom_sm
     zt = _align(pf.zt, y) if pf.zt.ndim < y.ndim else pf.zt
     return y - corr * zt
+
+
+def periodic_thomas_solve_t(pf: PeriodicTridiagFactor, g: jax.Array, *,
+                            method: str = "scan", unroll: int = 1) -> jax.Array:
+    """Transposed periodic solve A^T x = g from the SAME stored factor
+    (see ``periodic_corner_correction_t`` for the corner algebra)."""
+    y = thomas_solve_t(pf.factor, g, method=method, unroll=unroll)
+    return periodic_corner_correction_t(pf, y)
 
 
 def dense_tridiag(a, b, c, periodic: bool = False) -> jax.Array:

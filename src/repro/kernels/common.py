@@ -65,15 +65,23 @@ def pad_lanes(x: jax.Array, block_m: int, *,
     return pad_to_multiple(x, block_m, -1, value=1.0 if identity else 0.0)
 
 
-def pad_sweep(x: jax.Array, block_n: int, axis: int = 0) -> tuple[jax.Array, int]:
+def pad_sweep(x: jax.Array, block_n: int, axis: int = 0, *,
+              identity: bool = False) -> tuple[jax.Array, int]:
     """Zero-pad the sweep (N) axis to a multiple of the streamed N-chunk.
 
     Zero padding is exact for the *factored* constant-LHS kernels: a padded
     row computes ``(0 - 0*carry) * 0 = 0``, so padded rows contribute
     nothing to the forward carries and back-substitute to exactly 0 —
     finite under ``JAX_DEBUG_NANS`` (no division happens in the solve
-    kernels; the inverses were taken at factor time)."""
-    return pad_to_multiple(x, block_n, axis)
+    kernels; the inverses were taken at factor time).
+
+    ``identity=True`` pads with ones instead — required for the MAIN
+    diagonal of per-lane (batch-mode) operands, whose fused factorisation
+    DOES divide in-kernel: an all-zero padded row would compute
+    ``1/(0 - 0) = inf``, while an identity row factors as ``1/1`` and
+    back-substitutes to exactly 0 (the sweep-axis analogue of
+    ``pad_lanes(identity=True)``)."""
+    return pad_to_multiple(x, block_n, axis, value=1.0 if identity else 0.0)
 
 
 def vmem_working_set(n: int, block_m: int, n_rhs_blocks: int, n_lhs_vecs: int,

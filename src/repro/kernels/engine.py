@@ -1,0 +1,593 @@
+"""The declarative sweep-kernel engine behind every banded Pallas solver.
+
+The paper's whole kernel family — cuThomasConstantBatch, cuThomasBatch,
+cuPentConstantBatch, cuPentUniformBatch, cuPentBatch, plus their transposed
+(adjoint) and HBM-streamed (split-N) relatives — is ONE algorithm: a
+two-pass sweep where each pass is a short linear recurrence
+
+    out_i = (in_i - sum_j coeff_j(i) * carry_j) * scale(i)
+
+with a carry of order 1 (tridiagonal) or 2 (pentadiagonal), walked either
+ascending (forward substitution) or descending (back substitution).  Only
+*which coefficient rows feed which carry lag* and *where the stored
+inverse-diagonal scale sits* differ between variants — the forward solve
+scales the forward pass, the transposed solve scales the backward pass,
+the uniform variant reads one coefficient from a (1, 1) parameter block.
+
+This module makes that observation executable (DESIGN.md §2.2):
+
+  * ``SweepSpec`` — the declarative description of one solver variant:
+    bandwidth (3|5), layout (``shared`` factored LHS vs ``batch`` per-lane
+    fused factorisation), ``transposed``, ``streamed`` (VMEM-resident vs
+    HBM-streamed split-N), ``uniform`` (penta shared only).
+  * ``PassSpec`` — one pass of the sweep: the ``(coefficient row,
+    carry lag)`` terms in subtraction order plus an optional scale row.
+    ``SweepSpec.passes()`` looks both passes up in ``_PASS_TABLE`` — the
+    spec tables that replaced four hand-written kernel modules.
+  * ``shared_solver(spec)`` / ``batch_solver(spec)`` — the generic kernel
+    builders.  They own the grid layout, the ``chunk_spec`` index maps,
+    the VMEM carry scratch, the ``reset_carry`` zero-init (which makes the
+    boundary rows fall out of the general recurrence — no first/last-row
+    special cases anywhere), and emit the ``pl.pallas_call`` pair.
+  * ``REGISTRY`` — every variant the engine generates, by name.  Traffic
+    (``SweepSpec.traffic_bytes``) and VMEM accounting
+    (``SweepSpec.vmem_counts``) are derived from the spec, so a new
+    variant can never silently miss the roofline model or the budget
+    check.
+
+Generated bodies are arithmetic-identical (bit-exact) to the hand-written
+kernels they replaced: the subtraction order inside each pass and the
+zero-carry boundary handling reproduce the old instruction sequences
+exactly (``x - 0*c == x`` bitwise for finite ``c``).
+
+Transposed-shared variants run the adjoint sweeps of DESIGN.md §5.1 from
+the SAME stored factor: A = L·U means A^T = U^T·L^T, so the transposed
+kernels read *shifted* coefficient rows (``c_hat_{i-1}``, ``a_{i+1}``, …)
+that the dispatcher pre-shifts on the host (``repro.kernels.ops``).
+Transposed-``batch`` needs no kernel of its own — rolling the per-lane
+diagonals turns A^T into another batch system, so ``ops``/the solver
+backend reuse the forward batch kernels (there is deliberately no
+``transposed=True`` batch spec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import chunk_lhs_spec, chunk_spec, reset_carry, row, scalar, \
+    store_row
+
+# Sentinel coefficient source: the uniform-mode eps value, which rides in a
+# (1, 1) ARRAY operand (never a Python float baked into the kernel closure,
+# so traced Factorization leaves stay jittable — see penta docstrings).
+EPS_PARAM = "eps"
+
+
+@dataclasses.dataclass(frozen=True)
+class PassSpec:
+    """One pass of a two-pass sweep.
+
+    ``terms`` is a tuple of ``(coeff_src, carry_lag)`` pairs applied in
+    SUBTRACTION ORDER (float subtraction is not associative; the order is
+    part of the bit-exactness contract with the pre-engine kernels).
+    ``coeff_src`` is a row index into the stacked LHS (shared layout) or
+    into the per-lane coefficient refs (batch back-substitution), or
+    ``EPS_PARAM``.  ``scale`` multiplies the bracketed result (the stored
+    inverse diagonal) — ``None`` means the pass is unscaled.
+    """
+
+    terms: tuple
+    scale: object = None
+
+
+# (bandwidth, uniform, transposed) -> (forward pass, backward pass).
+#
+# Shared-layout LHS row conventions (stacked by repro.kernels.ops):
+#   tridiag          [a, inv_denom, c_hat]
+#   tridiag^T        [c_hat_{i-1}, inv_denom, a_{i+1}]
+#   penta            [eps, beta, inv_alpha, gamma, delta]
+#   penta uniform    [beta, inv_alpha, gamma, delta]      (+ eps param)
+#   penta^T          [delta_{i-2}, gamma_{i-1}, inv_alpha, beta_{i+1},
+#                     eps_{i+2}]
+#   penta^T uniform  [delta_{i-2}, gamma_{i-1}, inv_alpha, beta_{i+1}]
+#                                                         (+ eps param)
+# The transposed rows are the SAME stored factor vectors, shifted on the
+# host — A^T = U^T L^T from the forward's O(k N) storage, nothing new.
+_PASS_TABLE = {
+    (3, False, False): (PassSpec(((0, 1),), 1), PassSpec(((2, 1),), None)),
+    (3, False, True): (PassSpec(((0, 1),), None), PassSpec(((2, 1),), 1)),
+    (5, False, False): (PassSpec(((0, 2), (1, 1)), 2),
+                        PassSpec(((3, 1), (4, 2)), None)),
+    (5, False, True): (PassSpec(((0, 2), (1, 1)), None),
+                       PassSpec(((3, 1), (4, 2)), 2)),
+    (5, True, False): (PassSpec(((EPS_PARAM, 2), (0, 1)), 1),
+                       PassSpec(((2, 1), (3, 2)), None)),
+    (5, True, True): (PassSpec(((0, 2), (1, 1)), None),
+                      PassSpec(((3, 1), (EPS_PARAM, 2)), 2)),
+}
+
+# Batch-layout back substitution reads the coefficients the fused
+# factorisation just produced (c_hat, or gamma/delta), one (N, BLOCK_M)
+# per-lane array each.
+_BATCH_BWD = {
+    1: PassSpec(((0, 1),), None),
+    2: PassSpec(((0, 1), (1, 2)), None),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Declarative description of one banded-solver variant."""
+
+    bandwidth: int            # 3 | 5
+    layout: str               # "shared" (one factored LHS) | "batch"
+    transposed: bool = False  # solve A^T x = rhs from the same factor
+    streamed: bool = False    # HBM-streamed split-N vs VMEM-resident
+    uniform: bool = False     # penta shared only: eps as a (1, 1) operand
+
+    def __post_init__(self):
+        if self.bandwidth not in (3, 5):
+            raise ValueError(f"bandwidth must be 3 or 5, got {self.bandwidth}")
+        if self.layout not in ("shared", "batch"):
+            raise ValueError(f"unknown layout {self.layout!r}")
+        if self.uniform and (self.bandwidth != 5 or self.layout != "shared"):
+            raise ValueError("uniform is a shared-penta concept "
+                             "(cuPentUniformBatch)")
+        if self.transposed and self.layout == "batch":
+            raise ValueError(
+                "no transposed batch kernels: rolling the per-lane diagonals "
+                "turns A^T into another batch system, so the forward batch "
+                "kernels serve the adjoint (repro.solver.pallas)")
+
+    # -- derived structure --------------------------------------------------
+
+    @property
+    def order(self) -> int:
+        """Carry order of each sweep pass (1st/2nd-order recurrence)."""
+        return 1 if self.bandwidth == 3 else 2
+
+    @property
+    def lhs_rows(self) -> int:
+        """Rows of the stacked shared LHS block (0 for batch layout)."""
+        if self.layout != "shared":
+            return 0
+        if self.bandwidth == 3:
+            return 3
+        return 4 if self.uniform else 5
+
+    @property
+    def n_coefs(self) -> int:
+        """Per-lane coefficient arrays the fused factorisation produces
+        (c_hat, or gamma+delta) — the batch kernels' scratch/spill."""
+        return self.order if self.layout == "batch" else 0
+
+    @property
+    def carry_rows(self) -> int:
+        """Rows of the streamed forward kernel's VMEM carry scratch."""
+        if self.layout == "batch":
+            # factorisation carries: (c_hat, d_hat) or
+            # (gamma x2, delta x2, g x2) lags
+            return 2 if self.order == 1 else 6
+        return self.order
+
+    @property
+    def mode(self) -> str:
+        if self.layout == "batch":
+            return "batch"
+        return "uniform" if self.uniform else "constant"
+
+    @property
+    def name(self) -> str:
+        base = "thomas" if self.bandwidth == 3 else "penta"
+        name = f"{base}_{self.mode}"
+        if self.streamed:
+            name += "_streamed"
+        if self.transposed:
+            name += "_t"
+        return name
+
+    def passes(self) -> tuple:
+        """(forward PassSpec, backward PassSpec) for this variant."""
+        if self.layout == "batch":
+            return None, _BATCH_BWD[self.order]
+        return _PASS_TABLE[(self.bandwidth, self.uniform, self.transposed)]
+
+    # -- derived accounting (no hand-kept tables) ---------------------------
+
+    def traffic_words(self, n: int, m: int) -> int:
+        """HBM<->VMEM words one solve of an (n, m) RHS moves — the roofline
+        memory term the paper's speed-up rests on, derived from the spec's
+        stream structure (passes x {operands in, results out, LHS rows})."""
+        if self.layout == "batch":
+            if self.streamed:
+                # fwd: k+1 in, 1+order out (intermediate + spilled coefs);
+                # bwd: 1+order in, 1 out.
+                return (self.bandwidth + 2 * self.order + 4) * n * m
+            return (self.bandwidth + 2) * n * m
+        passes = 2 if self.streamed else 1
+        eps = 1 if self.uniform else 0
+        return passes * (2 * n * m + self.lhs_rows * n) + eps
+
+    def traffic_bytes(self, n: int, m: int, dtype=jnp.float32) -> int:
+        return self.traffic_words(n, m) * jnp.dtype(dtype).itemsize
+
+    def vmem_counts(self) -> tuple:
+        """(n_rhs_blocks, n_lhs_vecs, n_carry_rows) for the VMEM budget
+        checks (``common.check_vmem`` / ``check_vmem_streamed``).  For the
+        streamed batch pair this is the FORWARD kernel's (larger) chunk
+        working set: diagonals + rhs in, intermediate + spilled coefs out."""
+        if self.layout == "shared":
+            return 2, self.lhs_rows, self.order
+        blocks = self.bandwidth + 1 + 1 + self.n_coefs
+        return blocks, 0, self.carry_rows
+
+
+def _all_specs() -> tuple:
+    specs = []
+    for bw in (3, 5):
+        for transposed in (False, True):
+            for streamed in (False, True):
+                specs.append(SweepSpec(bw, "shared", transposed=transposed,
+                                       streamed=streamed))
+                if bw == 5:
+                    specs.append(SweepSpec(bw, "shared", transposed=transposed,
+                                           streamed=streamed, uniform=True))
+        for streamed in (False, True):
+            specs.append(SweepSpec(bw, "batch", streamed=streamed))
+    return tuple(specs)
+
+
+#: Every variant the engine generates, by name — the single source the
+#: dispatcher, the traffic model, and the CI parity matrix all enumerate.
+REGISTRY: dict = {s.name: s for s in _all_specs()}
+
+
+def find_spec(bandwidth: int, mode: str, *, streamed: bool = False,
+              transposed: bool = False) -> SweepSpec:
+    """Look up the spec serving (bandwidth, storage mode) — the tridiag
+    ``uniform`` mode shares the constant kernel (no eps vector to drop)."""
+    if bandwidth == 3 and mode == "uniform":
+        mode = "constant"
+    base = "thomas" if bandwidth == 3 else "penta"
+    name = f"{base}_{mode}"
+    if streamed:
+        name += "_streamed"
+    if transposed:
+        name += "_t"
+    return REGISTRY[name]
+
+
+def traffic_table(bandwidth: int, n: int, m: int, dtype=jnp.float32) -> dict:
+    """{variant_key: bytes} for every registered spec of ``bandwidth`` —
+    keys are the spec names minus the thomas_/penta_ prefix (``constant``,
+    ``constant_streamed_t``, ``batch_streamed``, …)."""
+    prefix = ("thomas_" if bandwidth == 3 else "penta_")
+    return {s.name[len(prefix):]: s.traffic_bytes(n, m, dtype)
+            for s in REGISTRY.values() if s.bandwidth == bandwidth}
+
+
+# ---------------------------------------------------------------------------
+# Generic pass bodies
+# ---------------------------------------------------------------------------
+
+def _shared_coeff(lhs_ref, eps_ref):
+    """Coefficient accessor for the shared layout: scalar per sweep row,
+    broadcast across the lane tile (the paper's broadcast-hit LHS copy)."""
+    def at(src, i):
+        if src == EPS_PARAM:
+            return eps_ref[0, 0]
+        return scalar(lhs_ref, src, i)
+    return at
+
+
+def _lane_coeff(refs):
+    """Coefficient accessor for the batch layout: a (BLOCK_M,) vector per
+    sweep row, read from per-lane (N, BLOCK_M) refs."""
+    def at(src, i):
+        return row(refs[src], i, refs[src].shape[1])
+    return at
+
+
+def _solve_pass(coeff_at, in_ref, out_ref, init, *, pspec: PassSpec,
+                order: int, length: int, reverse: bool, unroll: int):
+    """Run one sweep pass; returns the final carry tuple.
+
+    ``init`` is the carry tuple entering the pass (zeros, or the VMEM
+    scratch rows threading a streamed sweep across N-chunks).  ``in_ref``
+    and ``out_ref`` may alias (the resident kernels back-substitute in
+    place over the intermediate they just wrote)."""
+    m = in_ref.shape[1]
+
+    def body(t, carries):
+        i = length - 1 - t if reverse else t
+        acc = row(in_ref, i, m)
+        for src, lag in pspec.terms:
+            acc = acc - coeff_at(src, i) * carries[lag - 1]
+        if pspec.scale is not None:
+            acc = acc * coeff_at(pspec.scale, i)
+        store_row(out_ref, i, acc)
+        return (acc,) + carries[:order - 1]
+
+    return jax.lax.fori_loop(0, length, body, tuple(init), unroll=unroll)
+
+
+def _factor_pass(diag_at, rhs_ref, coef_store, out_ref, init, *, order: int,
+                 length: int, unroll: int):
+    """Fused factorisation + forward sweep (batch layout: cuThomasBatch /
+    cuPentBatch semantics — the per-lane LHS is re-factored every solve).
+
+    Zero-initialised carries make row 0 (and row 1 for penta) fall out of
+    the general step: ``a_0``/``b_0`` only ever multiply zero carries, so
+    no boundary special-casing — which is also what makes the streamed
+    chunking and the identity sweep-padding exact."""
+    m = rhs_ref.shape[1]
+
+    if order == 1:
+        def body(i, carry):
+            chat_p, dh_p = carry
+            a_i = diag_at(0, i)
+            inv = 1.0 / (diag_at(1, i) - a_i * chat_p)
+            chat = diag_at(2, i) * inv
+            coef_store(0, i, chat)
+            dh = (row(rhs_ref, i, m) - a_i * dh_p) * inv
+            store_row(out_ref, i, dh)
+            return chat, dh
+    else:
+        def body(i, carry):
+            g1, g2, dl1, dl2, gg1, gg2 = carry
+            a_i = diag_at(0, i)
+            beta_i = diag_at(1, i) - a_i * g2
+            alpha_i = diag_at(2, i) - a_i * dl2 - beta_i * g1
+            inv = 1.0 / alpha_i
+            gamma_i = (diag_at(3, i) - beta_i * dl1) * inv
+            delta_i = diag_at(4, i) * inv
+            coef_store(0, i, gamma_i)
+            coef_store(1, i, delta_i)
+            g_i = (row(rhs_ref, i, m) - a_i * gg2 - beta_i * gg1) * inv
+            store_row(out_ref, i, g_i)
+            return gamma_i, g1, delta_i, dl1, g_i, gg1
+
+    return jax.lax.fori_loop(0, length, body, tuple(init), unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# Shared-layout kernels (one factored LHS, broadcast to every lane)
+# ---------------------------------------------------------------------------
+
+def _shared_resident_kernel(*refs, spec: SweepSpec, n: int, unroll: int):
+    """Both passes in one kernel; the output block doubles as intermediate
+    storage (forward writes d_hat/g, backward overwrites with x)."""
+    if spec.uniform:
+        eps_ref, lhs_ref, in_ref, x_ref = refs
+    else:
+        (lhs_ref, in_ref, x_ref), eps_ref = refs, None
+    fwd, bwd = spec.passes()
+    at = _shared_coeff(lhs_ref, eps_ref)
+    m = in_ref.shape[1]
+    zeros = (jnp.zeros((m,), in_ref.dtype),) * spec.order
+    _solve_pass(at, in_ref, x_ref, zeros, pspec=fwd, order=spec.order,
+                length=n, reverse=False, unroll=unroll)
+    _solve_pass(at, x_ref, x_ref, zeros, pspec=bwd, order=spec.order,
+                length=n, reverse=True, unroll=unroll)
+
+
+def _shared_streamed_kernel(*refs, pspec: PassSpec, order: int, block_n: int,
+                            reverse: bool, uniform: bool, unroll: int):
+    """One pass over one (BLOCK_N, BLOCK_M) chunk; the carry scratch
+    threads the sweep state across the sequential N-chunk grid steps."""
+    if uniform:
+        eps_ref, lhs_ref, in_ref, out_ref, carry_ref = refs
+    else:
+        (lhs_ref, in_ref, out_ref, carry_ref), eps_ref = refs, None
+    m = in_ref.shape[1]
+    reset_carry(carry_ref, pl.program_id(1))
+    init = tuple(row(carry_ref, j, m) for j in range(order))
+    final = _solve_pass(_shared_coeff(lhs_ref, eps_ref), in_ref, out_ref,
+                        init, pspec=pspec, order=order, length=block_n,
+                        reverse=reverse, unroll=unroll)
+    for j in range(order):
+        store_row(carry_ref, j, final[j])
+
+
+@functools.lru_cache(maxsize=None)
+def shared_solver(spec: SweepSpec):
+    """Compile ``spec`` (shared layout) into its jitted pallas entry point:
+    ``solver(lhs, rhs, *, block_m, [block_n,] unroll, interpret, eps)``.
+
+    ``lhs`` is the (rows, N) stack of ``repro.kernels.ops.stack_*_lhs``
+    (pre-shifted for transposed specs); ``eps`` is the (1, 1) uniform
+    parameter operand.  Callers pad: M % block_m == 0, and for streamed
+    specs N % block_n == 0."""
+    assert spec.layout == "shared"
+
+    if not spec.streamed:
+        @functools.partial(jax.jit,
+                           static_argnames=("block_m", "unroll", "interpret"))
+        def solver(lhs, rhs, *, block_m=128, unroll=1, interpret=True,
+                   eps=None):
+            n, m = rhs.shape
+            in_specs = [pl.BlockSpec((spec.lhs_rows, n), lambda j: (0, 0)),
+                        _col_spec(n, block_m)]
+            args = [lhs, rhs]
+            if spec.uniform:
+                in_specs.insert(0, pl.BlockSpec((1, 1), lambda j: (0, 0)))
+                args.insert(0, eps)
+            return pl.pallas_call(
+                functools.partial(_shared_resident_kernel, spec=spec, n=n,
+                                  unroll=unroll),
+                grid=(m // block_m,),
+                in_specs=in_specs,
+                out_specs=_col_spec(n, block_m),
+                out_shape=jax.ShapeDtypeStruct((n, m), rhs.dtype),
+                interpret=interpret,
+            )(*args)
+        return solver
+
+    @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                                 "unroll", "interpret"))
+    def solver(lhs, rhs, *, block_m=128, block_n=512, unroll=1,
+               interpret=True, eps=None):
+        n, m = rhs.shape
+        num_n = n // block_n
+        grid = (m // block_m, num_n)
+        carry = [pltpu.VMEM((spec.order, block_m), rhs.dtype)]
+        fwd, bwd = spec.passes()
+
+        def one_pass(pspec, reverse, operand):
+            in_specs = [chunk_lhs_spec(spec.lhs_rows, block_n, num_n,
+                                       reverse=reverse),
+                        chunk_spec(block_n, block_m, num_n, reverse=reverse)]
+            args = [lhs, operand]
+            if spec.uniform:
+                in_specs.insert(0, pl.BlockSpec((1, 1), lambda j, k: (0, 0)))
+                args.insert(0, eps)
+            return pl.pallas_call(
+                functools.partial(_shared_streamed_kernel, pspec=pspec,
+                                  order=spec.order, block_n=block_n,
+                                  reverse=reverse, uniform=spec.uniform,
+                                  unroll=unroll),
+                grid=grid,
+                in_specs=in_specs,
+                out_specs=chunk_spec(block_n, block_m, num_n, reverse=reverse),
+                out_shape=jax.ShapeDtypeStruct((n, m), rhs.dtype),
+                scratch_shapes=carry,
+                interpret=interpret,
+            )(*args)
+
+        mid = one_pass(fwd, False, rhs)           # ascending: d_hat / g
+        return one_pass(bwd, True, mid)           # descending: x
+    return solver
+
+
+# ---------------------------------------------------------------------------
+# Batch-layout kernels (per-lane LHS, factorisation fused into the solve)
+# ---------------------------------------------------------------------------
+
+def _batch_resident_kernel(*refs, spec: SweepSpec, n: int, unroll: int):
+    nd = spec.bandwidth
+    diag_refs, rhs_ref, x_ref = refs[:nd], refs[nd], refs[nd + 1]
+    coef_refs = refs[nd + 2:]                     # VMEM scratch
+    m = rhs_ref.shape[1]
+    zeros = jnp.zeros((m,), rhs_ref.dtype)
+    _factor_pass(_lane_coeff(diag_refs), rhs_ref,
+                 lambda r, i, v: store_row(coef_refs[r], i, v),
+                 x_ref, (zeros,) * spec.carry_rows, order=spec.order,
+                 length=n, unroll=unroll)
+    _, bwd = spec.passes()
+    _solve_pass(_lane_coeff(coef_refs), x_ref, x_ref, (zeros,) * spec.order,
+                pspec=bwd, order=spec.order, length=n, reverse=True,
+                unroll=unroll)
+
+
+def _batch_streamed_fwd_kernel(*refs, spec: SweepSpec, block_n: int,
+                               unroll: int):
+    """Fused factorisation over ascending chunks; the intermediate AND the
+    factor coefficients (c_hat / gamma+delta) spill to HBM for the
+    backward kernel (DESIGN.md §2.2's scratch-spill layout)."""
+    nd = spec.bandwidth
+    diag_refs, rhs_ref = refs[:nd], refs[nd]
+    out_ref = refs[nd + 1]
+    coef_refs = refs[nd + 2:nd + 2 + spec.n_coefs]   # HBM-backed outputs
+    carry_ref = refs[-1]
+    m = rhs_ref.shape[1]
+    reset_carry(carry_ref, pl.program_id(1))
+    init = tuple(row(carry_ref, j, m) for j in range(spec.carry_rows))
+    final = _factor_pass(_lane_coeff(diag_refs), rhs_ref,
+                         lambda r, i, v: store_row(coef_refs[r], i, v),
+                         out_ref, init, order=spec.order, length=block_n,
+                         unroll=unroll)
+    for j in range(spec.carry_rows):
+        store_row(carry_ref, j, final[j])
+
+
+def _batch_streamed_bwd_kernel(*refs, spec: SweepSpec, block_n: int,
+                               unroll: int):
+    """Back substitution over descending chunks, reading the spilled
+    coefficients back from HBM."""
+    coef_refs = refs[:spec.n_coefs]
+    in_ref, x_ref, carry_ref = refs[spec.n_coefs], refs[spec.n_coefs + 1], \
+        refs[-1]
+    m = in_ref.shape[1]
+    reset_carry(carry_ref, pl.program_id(1))
+    _, bwd = spec.passes()
+    init = tuple(row(carry_ref, j, m) for j in range(spec.order))
+    final = _solve_pass(_lane_coeff(coef_refs), in_ref, x_ref, init,
+                        pspec=bwd, order=spec.order, length=block_n,
+                        reverse=True, unroll=unroll)
+    for j in range(spec.order):
+        store_row(carry_ref, j, final[j])
+
+
+@functools.lru_cache(maxsize=None)
+def batch_solver(spec: SweepSpec):
+    """Compile ``spec`` (batch layout) into its jitted pallas entry point:
+    ``solver(*diagonals, rhs, *, block_m, [block_n,] unroll, interpret)``.
+
+    Callers pad lanes (identity main diagonal) and, for streamed specs,
+    the sweep axis (identity main diagonal there too — the fused
+    factorisation divides in-kernel, see ``common.pad_sweep``)."""
+    assert spec.layout == "batch"
+
+    if not spec.streamed:
+        @functools.partial(jax.jit,
+                           static_argnames=("block_m", "unroll", "interpret"))
+        def solver(*args, block_m=128, unroll=1, interpret=True):
+            n, m = args[-1].shape
+            sp = _col_spec(n, block_m)
+            return pl.pallas_call(
+                functools.partial(_batch_resident_kernel, spec=spec, n=n,
+                                  unroll=unroll),
+                grid=(m // block_m,),
+                in_specs=[sp] * (spec.bandwidth + 1),
+                out_specs=sp,
+                out_shape=jax.ShapeDtypeStruct((n, m), args[-1].dtype),
+                scratch_shapes=[pltpu.VMEM((n, block_m), args[-1].dtype)
+                                for _ in range(spec.n_coefs)],
+                interpret=interpret,
+            )(*args)
+        return solver
+
+    @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                                 "unroll", "interpret"))
+    def solver(*args, block_m=128, block_n=512, unroll=1, interpret=True):
+        n, m = args[-1].shape
+        dtype = args[-1].dtype
+        num_n = n // block_n
+        grid = (m // block_m, num_n)
+        csp = chunk_spec(block_n, block_m, num_n)
+        shape = jax.ShapeDtypeStruct((n, m), dtype)
+
+        outs = pl.pallas_call(
+            functools.partial(_batch_streamed_fwd_kernel, spec=spec,
+                              block_n=block_n, unroll=unroll),
+            grid=grid,
+            in_specs=[csp] * (spec.bandwidth + 1),
+            out_specs=[csp] * (1 + spec.n_coefs),
+            out_shape=[shape] * (1 + spec.n_coefs),
+            scratch_shapes=[pltpu.VMEM((spec.carry_rows, block_m), dtype)],
+            interpret=interpret,
+        )(*args)
+        mid, coefs = outs[0], outs[1:]
+
+        rsp = chunk_spec(block_n, block_m, num_n, reverse=True)
+        return pl.pallas_call(
+            functools.partial(_batch_streamed_bwd_kernel, spec=spec,
+                              block_n=block_n, unroll=unroll),
+            grid=grid,
+            in_specs=[rsp] * (spec.n_coefs + 1),
+            out_specs=rsp,
+            out_shape=shape,
+            scratch_shapes=[pltpu.VMEM((spec.order, block_m), dtype)],
+            interpret=interpret,
+        )(*coefs, mid)
+    return solver
+
+
+def _col_spec(n: int, block_m: int):
+    return pl.BlockSpec((n, block_m), lambda j: (0, j))

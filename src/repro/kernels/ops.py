@@ -1,10 +1,17 @@
 """Public jit'd entry points for the solver kernels.
 
-These wrap the raw ``pallas_call`` kernels with:
-  * factored-LHS stacking from ``repro.core`` factor types,
-  * lane padding (the batch axis is padded to the lane-tile multiple),
+These wrap the engine-generated ``pallas_call`` kernels
+(``repro.kernels.engine``) with:
+  * factored-LHS stacking from ``repro.core`` factor types — including the
+    host-side row SHIFTS that turn the stored forward factor into the
+    transposed kernels' coefficient rows (A^T = U^T·L^T needs c_hat_{i-1}
+    / a_{i+1} etc., never a second factor),
+  * lane padding (the batch axis is padded to the lane-tile multiple) and
+    sweep padding (streamed kernels pad N to the chunk multiple; batch
+    operands identity-pad the main diagonal on BOTH axes because the
+    fused factorisation divides in-kernel),
   * automatic ``interpret=True`` off-TPU (validation mode on CPU),
-  * VMEM-budget checks,
+  * spec-derived VMEM-budget checks,
   * an optional ``shard_map`` distribution over the system/batch axis — the
     paper's single-LHS idea at cluster scale: ONE LHS copy per device
     (replicated), RHS systems sharded across the mesh, zero collectives in
@@ -13,84 +20,127 @@ These wrap the raw ``pallas_call`` kernels with:
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import (PentaFactor, PeriodicPentaFactor,
                         PeriodicTridiagFactor, TridiagFactor)
 from .common import (check_vmem, check_vmem_streamed, default_interpret,
                      pad_lanes, pad_sweep)
+from .engine import SweepSpec, batch_solver, find_spec, shared_solver
 from .fused_cn import fused_cn_tridiag_pallas
 from .fused_cn_penta import fused_cn_penta_pallas
-from .penta import penta_batch_pallas, penta_constant_pallas
-from .penta_streamed import penta_constant_streamed_pallas
-from .thomas import thomas_batch_pallas, thomas_constant_pallas
-from .thomas_streamed import thomas_constant_streamed_pallas
 
 
-def stack_tridiag_lhs(f: TridiagFactor) -> jax.Array:
+def _shift_down(v: jax.Array, k: int) -> jax.Array:
+    """Row i reads the stored vector at i-k (zeros shift in at the top)."""
+    return jnp.concatenate([jnp.zeros_like(v[:k]), v[:-k]], axis=0)
+
+
+def _shift_up(v: jax.Array, k: int) -> jax.Array:
+    """Row i reads the stored vector at i+k (zeros shift in at the bottom)."""
+    return jnp.concatenate([v[k:], jnp.zeros_like(v[:k])], axis=0)
+
+
+def stack_tridiag_lhs(f: TridiagFactor, *,
+                      transposed: bool = False) -> jax.Array:
+    """(3, N) kernel LHS: [a, inv_denom, c_hat], or the transposed rows
+    [c_hat_{i-1}, inv_denom, a_{i+1}] — same stored vectors, shifted."""
+    if transposed:
+        return jnp.stack([_shift_down(f.c_hat, 1), f.inv_denom,
+                          _shift_up(f.a, 1)])
     return jnp.stack([f.a, f.inv_denom, f.c_hat])
 
 
-def stack_penta_lhs(f: PentaFactor, uniform: bool = False) -> jax.Array:
+def stack_penta_lhs(f: PentaFactor, uniform: bool = False, *,
+                    transposed: bool = False) -> jax.Array:
+    """(5, N) kernel LHS [eps, beta, inv_alpha, gamma, delta] ((4, N) when
+    ``uniform`` drops the eps row); transposed: [delta_{i-2}, gamma_{i-1},
+    inv_alpha, beta_{i+1}(, eps_{i+2})]."""
+    if transposed:
+        rows = [_shift_down(f.delta, 2), _shift_down(f.gamma, 1),
+                f.inv_alpha, _shift_up(f.beta, 1)]
+        if not uniform:
+            eps = jnp.broadcast_to(f.eps, f.beta.shape)
+            rows.append(_shift_up(eps, 2))
+        return jnp.stack(rows)
     if uniform:
         return jnp.stack([f.beta, f.inv_alpha, f.gamma, f.delta])
     eps = jnp.broadcast_to(f.eps, f.beta.shape)
     return jnp.stack([eps, f.beta, f.inv_alpha, f.gamma, f.delta])
 
 
+def _check_spec_vmem(spec: SweepSpec, n: int, block_m: int,
+                     block_n: int | None, dtype) -> None:
+    """Spec-derived working-set check (no hand-kept per-kernel counts)."""
+    n_rhs, n_lhs, n_carry = spec.vmem_counts()
+    if block_n is None:
+        check_vmem(n, block_m, n_rhs_blocks=n_rhs, n_lhs_vecs=n_lhs,
+                   itemsize=dtype.itemsize)
+    else:
+        check_vmem_streamed(block_n, block_m, n_rhs, n_lhs, n_carry,
+                            itemsize=dtype.itemsize)
+
+
 def thomas_constant(f: TridiagFactor, d: jax.Array, *, block_m: int = 128,
                     block_n: int | None = None, unroll: int = 1,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    transposed: bool = False) -> jax.Array:
     """Constant-LHS batched Thomas solve (cuThomasConstantBatch). d: (N, M).
 
     ``block_n=None`` runs the VMEM-resident kernel (full N per grid step);
-    an integer ``block_n`` runs the HBM-streamed split-N kernel pair, which
-    lifts the VMEM wall for large N (``thomas_streamed.py``)."""
+    an integer ``block_n`` runs the HBM-streamed split-N kernel pair,
+    which lifts the VMEM wall for large N.  ``transposed=True`` solves
+    A^T x = d from the SAME stored factor (the adjoint sweeps)."""
     if interpret is None:
         interpret = default_interpret()
     n = d.shape[0]
-    if block_n is None:
-        check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=3,
-                   itemsize=d.dtype.itemsize)
-        d_pad, m = pad_lanes(d, block_m)
-        x = thomas_constant_pallas(stack_tridiag_lhs(f), d_pad,
-                                   block_m=block_m, unroll=unroll,
-                                   interpret=interpret)
-        return x[:, :m]
-    check_vmem_streamed(block_n, block_m, n_rhs_blocks=2, n_lhs_vecs=3,
-                        n_carry=1, itemsize=d.dtype.itemsize)
-    lhs, _ = pad_sweep(stack_tridiag_lhs(f), block_n, axis=1)
+    spec = find_spec(3, "constant", streamed=block_n is not None,
+                     transposed=transposed)
+    _check_spec_vmem(spec, n, block_m, block_n, d.dtype)
+    lhs = stack_tridiag_lhs(f, transposed=transposed)
     d_pad, m = pad_lanes(d, block_m)
+    if block_n is None:
+        x = shared_solver(spec)(lhs, d_pad, block_m=block_m, unroll=unroll,
+                                interpret=interpret)
+        return x[:, :m]
+    lhs, _ = pad_sweep(lhs, block_n, axis=1)
     d_pad, _ = pad_sweep(d_pad, block_n, axis=0)
-    x = thomas_constant_streamed_pallas(lhs, d_pad, block_m=block_m,
-                                        block_n=block_n, unroll=unroll,
-                                        interpret=interpret)
+    x = shared_solver(spec)(lhs, d_pad, block_m=block_m, block_n=block_n,
+                            unroll=unroll, interpret=interpret)
     return x[:n, :m]
 
 
-def thomas_batch(a, b, c, d, *, block_m: int = 128, unroll: int = 1,
+def thomas_batch(a, b, c, d, *, block_m: int = 128,
+                 block_n: int | None = None, unroll: int = 1,
                  interpret: bool | None = None) -> jax.Array:
     """Per-system-LHS baseline (cuThomasBatch). a/b/c/d: (N, M).
 
     Dead padded lanes get an IDENTITY main diagonal (b = 1), not the zero
     pad — the fused factorisation would otherwise compute 1/0 and flood
     the padding with inf/NaN (they are sliced off, but they poison
-    ``JAX_DEBUG_NANS`` runs and waste the flush-to-zero path)."""
+    ``JAX_DEBUG_NANS`` runs and waste the flush-to-zero path).  An integer
+    ``block_n`` selects the HBM-streamed split-N pair, which additionally
+    identity-pads the main diagonal along the sweep axis for the same
+    reason and spills the fused c_hat to HBM between the passes."""
     if interpret is None:
         interpret = default_interpret()
-    n = d.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=6, n_lhs_vecs=0,
-               itemsize=d.dtype.itemsize)  # 3 diag + rhs + out + scratch
-    m = d.shape[1]
+    n, m = d.shape
+    spec = find_spec(3, "batch", streamed=block_n is not None)
+    _check_spec_vmem(spec, n, block_m, block_n, d.dtype)
+    idents = (False, True, False, False)          # b is the main diagonal
     args = [pad_lanes(x, block_m, identity=ident)[0]
-            for x, ident in ((a, False), (b, True), (c, False), (d, False))]
-    x = thomas_batch_pallas(*args, block_m=block_m, unroll=unroll,
-                            interpret=interpret)
-    return x[:, :m]
+            for x, ident in zip((a, b, c, d), idents)]
+    if block_n is None:
+        x = batch_solver(spec)(*args, block_m=block_m, unroll=unroll,
+                               interpret=interpret)
+        return x[:, :m]
+    args = [pad_sweep(x, block_n, axis=0, identity=ident)[0]
+            for x, ident in zip(args, idents)]
+    x = batch_solver(spec)(*args, block_m=block_m, block_n=block_n,
+                           unroll=unroll, interpret=interpret)
+    return x[:n, :m]
 
 
 def _uniform_eps_param(f: PentaFactor, dtype) -> jax.Array:
@@ -106,52 +156,56 @@ def _uniform_eps_param(f: PentaFactor, dtype) -> jax.Array:
 
 def penta_constant(f: PentaFactor, rhs: jax.Array, *, block_m: int = 128,
                    block_n: int | None = None, unroll: int = 1,
-                   interpret: bool | None = None,
-                   uniform: bool = False) -> jax.Array:
+                   interpret: bool | None = None, uniform: bool = False,
+                   transposed: bool = False) -> jax.Array:
     """Constant-LHS batched penta solve (cuPentConstantBatch /
     cuPentUniformBatch when ``uniform``).  ``block_n`` selects the
-    HBM-streamed split-N kernel pair (``penta_streamed.py``)."""
+    HBM-streamed split-N kernel pair; ``transposed=True`` solves
+    A^T x = rhs from the SAME stored factor."""
     if interpret is None:
         interpret = default_interpret()
     n = rhs.shape[0]
+    spec = find_spec(5, "uniform" if uniform else "constant",
+                     streamed=block_n is not None, transposed=transposed)
+    _check_spec_vmem(spec, n, block_m, block_n, rhs.dtype)
     eps = _uniform_eps_param(f, rhs.dtype) if uniform else None
-    lhs = stack_penta_lhs(f, uniform=uniform)
-    if block_n is None:
-        check_vmem(n, block_m, n_rhs_blocks=2, n_lhs_vecs=5,
-                   itemsize=rhs.dtype.itemsize)
-        rhs_pad, m = pad_lanes(rhs, block_m)
-        x = penta_constant_pallas(lhs, rhs_pad, block_m=block_m,
-                                  unroll=unroll, interpret=interpret,
-                                  uniform=uniform, eps=eps)
-        return x[:, :m]
-    check_vmem_streamed(block_n, block_m, n_rhs_blocks=2, n_lhs_vecs=5,
-                        n_carry=2, itemsize=rhs.dtype.itemsize)
-    lhs, _ = pad_sweep(lhs, block_n, axis=1)
+    lhs = stack_penta_lhs(f, uniform=uniform, transposed=transposed)
     rhs_pad, m = pad_lanes(rhs, block_m)
+    if block_n is None:
+        x = shared_solver(spec)(lhs, rhs_pad, block_m=block_m,
+                                unroll=unroll, interpret=interpret, eps=eps)
+        return x[:, :m]
+    lhs, _ = pad_sweep(lhs, block_n, axis=1)
     rhs_pad, _ = pad_sweep(rhs_pad, block_n, axis=0)
-    x = penta_constant_streamed_pallas(lhs, rhs_pad, block_m=block_m,
-                                       block_n=block_n, unroll=unroll,
-                                       interpret=interpret, uniform=uniform,
-                                       eps=eps)
+    x = shared_solver(spec)(lhs, rhs_pad, block_m=block_m, block_n=block_n,
+                            unroll=unroll, interpret=interpret, eps=eps)
     return x[:n, :m]
 
 
-def penta_batch(a, b, c, d, e, rhs, *, block_m: int = 128, unroll: int = 1,
+def penta_batch(a, b, c, d, e, rhs, *, block_m: int = 128,
+                block_n: int | None = None, unroll: int = 1,
                 interpret: bool | None = None) -> jax.Array:
+    """Per-system-LHS baseline (cuPentBatch).  Identity-pads the MAIN
+    diagonal c on the lane axis (and on the sweep axis when streamed):
+    dead lanes/rows must factor as identity, not divide by the zero pad.
+    ``block_n`` selects the streamed pair (gamma/delta spill to HBM)."""
     if interpret is None:
         interpret = default_interpret()
-    n = rhs.shape[0]
-    check_vmem(n, block_m, n_rhs_blocks=9, n_lhs_vecs=0,
-               itemsize=rhs.dtype.itemsize)
-    m = rhs.shape[1]
-    # identity-pad the MAIN diagonal c (see thomas_batch): dead lanes must
-    # factor as identity rows, not divide by the zero pad.
+    n, m = rhs.shape
+    spec = find_spec(5, "batch", streamed=block_n is not None)
+    _check_spec_vmem(spec, n, block_m, block_n, rhs.dtype)
+    idents = (False, False, True, False, False, False)  # c is the main diag
     args = [pad_lanes(x, block_m, identity=ident)[0]
-            for x, ident in ((a, False), (b, False), (c, True), (d, False),
-                             (e, False), (rhs, False))]
-    x = penta_batch_pallas(*args, block_m=block_m, unroll=unroll,
-                           interpret=interpret)
-    return x[:, :m]
+            for x, ident in zip((a, b, c, d, e, rhs), idents)]
+    if block_n is None:
+        x = batch_solver(spec)(*args, block_m=block_m, unroll=unroll,
+                               interpret=interpret)
+        return x[:, :m]
+    args = [pad_sweep(x, block_n, axis=0, identity=ident)[0]
+            for x, ident in zip(args, idents)]
+    x = batch_solver(spec)(*args, block_m=block_m, block_n=block_n,
+                           unroll=unroll, interpret=interpret)
+    return x[:n, :m]
 
 
 def fused_cn_step(pf: PeriodicTridiagFactor, sigma: float, c: jax.Array, *,
@@ -200,25 +254,22 @@ def fused_cn_penta_step(pf: PeriodicPentaFactor, sigma: float, c: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Analytic HBM traffic for one solve as dispatched by this module — the
-# roofline memory term the paper's speed-up rests on, per storage mode and
-# resident-vs-streamed kernel choice.
+# Analytic HBM traffic for one solve as dispatched by this module — derived
+# from the registered SweepSpec, so every generated variant (transposed,
+# batch-streamed, ...) automatically has a roofline entry.
 # ---------------------------------------------------------------------------
 
 def solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int, m: int, *,
-                             dtype=jnp.float32, streamed: bool = False) -> int:
+                             dtype=jnp.float32, streamed: bool = False,
+                             transposed: bool = False) -> int:
     """Bytes moved HBM<->VMEM by one batched solve of an (n, m) RHS."""
-    from . import penta as _penta_k
-    from . import thomas as _thomas_k
-    table = (_thomas_k if bandwidth == 3 else _penta_k).hbm_traffic_bytes(
-        n, m, dtype=dtype)
-    key = mode if mode in table else "constant"   # tridiag uniform == constant
-    if streamed:
-        key += "_streamed"
-    if key not in table:
-        raise ValueError(f"no traffic model for mode={mode!r} "
-                         f"streamed={streamed} (bandwidth {bandwidth})")
-    return table[key]
+    if mode == "batch" and transposed:
+        # the adjoint of a batch solve rolls the per-lane diagonals and
+        # runs the FORWARD batch kernels — identical streams.
+        transposed = False
+    spec = find_spec(bandwidth, mode, streamed=streamed,
+                     transposed=transposed)
+    return spec.traffic_bytes(n, m, dtype)
 
 
 # ---------------------------------------------------------------------------

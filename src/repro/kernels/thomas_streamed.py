@@ -1,113 +1,40 @@
-"""HBM-streamed (split-N) batched Thomas solve — constant shared LHS.
+"""HBM-streamed (split-N) batched Thomas solvers — engine spec table.
 
-The resident ``thomas_constant_kernel`` holds the full (N, BLOCK_M) RHS in
-VMEM, which caps N at roughly ``VMEM_BUDGET / (2·BLOCK_M·itemsize)``.  This
-variant lifts that wall: a 2-D grid ``(M/BLOCK_M, N/BLOCK_N)`` streams
+The resident kernels hold the full (N, BLOCK_M) RHS in VMEM, capping N at
+roughly ``VMEM_BUDGET / (2·BLOCK_M·itemsize)``.  The streamed variants
+lift that wall: a 2-D grid ``(M/BLOCK_M, N/BLOCK_N)`` streams
 (BLOCK_N, BLOCK_M) chunks through VMEM while the sweep state rides a tiny
-``(1, BLOCK_M)`` VMEM scratch that persists across the sequential N-chunk
-grid steps (the last grid axis iterates fastest on TPU).
+VMEM scratch that persists across the sequential N-chunk grid steps (the
+last grid axis iterates fastest on TPU).  Two kernels — the TPU analogue
+of the paper's 2-kernel pipeline: the forward kernel walks chunks
+ascending in N and writes the intermediate d_hat to HBM; the backward
+kernel walks them descending (reversed index_maps) and overwrites it with
+x.  All of that plumbing lives in ``repro.kernels.engine`` now; this
+module just names the streamed tridiagonal family:
 
-Two kernels — the TPU analogue of the paper's 2-kernel pipeline:
+  * ``thomas_constant_streamed_pallas``   — shared factored LHS.
+  * ``thomas_constant_streamed_t_pallas`` — the transposed (adjoint)
+    sweeps from the SAME stored factor, so large-N ``grad(solve)`` stays
+    off the reference fallback.
+  * ``thomas_batch_streamed_pallas``      — per-lane LHS with the fused
+    factorisation's c_hat scratch SPILLED to HBM between the two passes
+    (DESIGN.md §2.2), lifting the VMEM wall for ``mode="batch"`` too.
 
-  * ``thomas_streamed_fwd_kernel``  — chunks ascending in N; carries
-    ``dh_prev`` and writes the forward-substituted d_hat to HBM.
-  * ``thomas_streamed_bwd_kernel``  — chunks *descending* in N (reversed
-    index_map); carries ``x_next`` and overwrites d_hat chunks with x.
-
-Boundary rows need no special cases: the carry is zero-initialised on each
-lane tile's first chunk, so ``dh_0 = (d_0 − a_0·0)·inv_0`` and
-``x_{N−1} = d̂_{N−1} − ĉ_{N−1}·0`` fall out of the general recurrence
-(``thomas_factor`` forces a_0 = 0, and ĉ_{N−1} multiplies the zero carry).
-For the same reason zero-padding N up to a BLOCK_N multiple is exact and
-NaN-free: padded rows compute ``(0 − 0·carry)·0 = 0``.
-
-HBM traffic: 4·N·M + 2·3·N words per solve (the intermediate d̂ makes one
-HBM round trip) vs the resident kernel's 2·N·M + 3·N — still well under
-the 5·N·M of the per-system-LHS baseline.  See ``hbm_traffic_bytes`` in
-``thomas.py``.
+Boundary rows need no special cases: carries zero-init on each lane
+tile's first chunk, so the first/last rows fall out of the general
+recurrence.  Zero sweep-padding is exact for the factored kernels
+(``(0 - 0·carry)·0 = 0``); the batch kernels divide in-kernel, so their
+MAIN diagonal identity-pads along N as well as along the lanes
+(``common.pad_sweep(identity=True)``).
 """
 
 from __future__ import annotations
 
-import functools
+from .engine import REGISTRY, batch_solver, shared_solver
 
-import jax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from .common import (chunk_lhs_spec, chunk_spec, reset_carry, row, scalar,
-                     store_row)
-
-
-def thomas_streamed_fwd_kernel(lhs_ref, d_ref, dh_ref, carry_ref, *,
-                               block_n: int, unroll: int):
-    """lhs_ref: (3, BLOCK_N) chunk of [a, inv_denom, c_hat];
-    d_ref/dh_ref: (BLOCK_N, BLOCK_M); carry_ref: (1, BLOCK_M) = dh_prev."""
-    m = d_ref.shape[1]
-    reset_carry(carry_ref, pl.program_id(1))
-
-    def fwd(i, dh_prev):
-        dh = (row(d_ref, i, m) - scalar(lhs_ref, 0, i) * dh_prev) \
-            * scalar(lhs_ref, 1, i)
-        store_row(dh_ref, i, dh)
-        return dh
-
-    last = jax.lax.fori_loop(0, block_n, fwd, row(carry_ref, 0, m),
-                             unroll=unroll)
-    store_row(carry_ref, 0, last)
-
-
-def thomas_streamed_bwd_kernel(lhs_ref, dh_ref, x_ref, carry_ref, *,
-                               block_n: int, unroll: int):
-    """Back-substitution over descending chunks; carry_ref holds x_next."""
-    m = dh_ref.shape[1]
-    reset_carry(carry_ref, pl.program_id(1))
-
-    def bwd(t, x_next):
-        i = block_n - 1 - t
-        x_i = row(dh_ref, i, m) - scalar(lhs_ref, 2, i) * x_next
-        store_row(x_ref, i, x_i)
-        return x_i
-
-    first = jax.lax.fori_loop(0, block_n, bwd, row(carry_ref, 0, m),
-                              unroll=unroll)
-    store_row(carry_ref, 0, first)
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("block_m", "block_n", "unroll",
-                                    "interpret"))
-def thomas_constant_streamed_pallas(lhs: jax.Array, d: jax.Array, *,
-                                    block_m: int = 128, block_n: int = 512,
-                                    unroll: int = 1,
-                                    interpret: bool = True) -> jax.Array:
-    """lhs: (3, N) stacked [a, inv_denom, c_hat]; d: (N, M).
-    Requires N % block_n == 0 and M % block_m == 0 (callers pad)."""
-    n, m = d.shape
-    num_n = n // block_n
-    grid = (m // block_m, num_n)
-    carry = [pltpu.VMEM((1, block_m), d.dtype)]
-
-    dh = pl.pallas_call(
-        functools.partial(thomas_streamed_fwd_kernel, block_n=block_n,
-                          unroll=unroll),
-        grid=grid,
-        in_specs=[chunk_lhs_spec(3, block_n, num_n),
-                  chunk_spec(block_n, block_m, num_n)],
-        out_specs=chunk_spec(block_n, block_m, num_n),
-        out_shape=jax.ShapeDtypeStruct((n, m), d.dtype),
-        scratch_shapes=carry,
-        interpret=interpret,
-    )(lhs, d)
-
-    return pl.pallas_call(
-        functools.partial(thomas_streamed_bwd_kernel, block_n=block_n,
-                          unroll=unroll),
-        grid=grid,
-        in_specs=[chunk_lhs_spec(3, block_n, num_n, reverse=True),
-                  chunk_spec(block_n, block_m, num_n, reverse=True)],
-        out_specs=chunk_spec(block_n, block_m, num_n, reverse=True),
-        out_shape=jax.ShapeDtypeStruct((n, m), d.dtype),
-        scratch_shapes=carry,
-        interpret=interpret,
-    )(lhs, dh)
+thomas_constant_streamed_pallas = shared_solver(
+    REGISTRY["thomas_constant_streamed"])
+thomas_constant_streamed_t_pallas = shared_solver(
+    REGISTRY["thomas_constant_streamed_t"])
+thomas_batch_streamed_pallas = batch_solver(
+    REGISTRY["thomas_batch_streamed"])

@@ -17,7 +17,11 @@ Two properties make this the paper-faithful adjoint:
     solve, and every step of a scanned time loop.  (Periodic operators
     additionally store the transposed corner aux ``zt``/``Zt`` — same
     O(N)-sized vectors as the forward's ``z``/``Z``, solved once at factor
-    time.)
+    time.)  Each backend supplies its own transpose hook: the ``pallas``
+    backend runs the sweep engine's TRANSPOSED Pallas kernels (resident
+    or HBM-streamed, matching the forward's tuned blocks — large-N
+    gradients never fall back to host-shaped reference sweeps), while
+    ``reference``/``sharded`` run the ``repro.core`` transposed scans.
   * Cotangents flow to the spec's vector-valued ``diagonals`` leaves (the
     carriers a PDE-constrained optimisation differentiates), while the
     derived ``stored`` factor leaves get zero cotangent.  Because the

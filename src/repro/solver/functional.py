@@ -116,8 +116,10 @@ jax.tree_util.register_dataclass(
 
 def select_backend(system: BandedSystem, *, block_m: int | None = None,
                    block_n: int | None = None) -> str:
-    """The ``backend="auto"`` policy: pallas when it fits (resident OR
-    HBM-streamed split-N), else reference."""
+    """The ``backend="auto"`` policy: pallas when a kernel exists (resident
+    OR HBM-streamed split-N — every storage mode streams, batch included),
+    else reference (today that means periodic x batch, or a pathologically
+    small VMEM budget)."""
     from . import pallas as _pallas
 
     ok, _why = _pallas.supports(system, block_m=block_m, block_n=block_n)

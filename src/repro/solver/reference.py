@@ -16,9 +16,11 @@ backend behind ``repro.solver.functional`` — both need pure functions of
     uniform-mode factor back to a vector for the sweep.
   * ``solve_stored(...)``      — run the solve given meta + stored + rhs.
   * ``transpose_solve_stored(...)`` — solve A^T x = rhs from the SAME
-    stored factor (the adjoint sweeps; DESIGN.md §5.1).  Registered as the
-    transpose hook for the ``pallas`` and ``sharded`` pure backends too,
-    since all three share the stored-factor layout.
+    stored factor (the adjoint sweeps; DESIGN.md §5.1).  Also the
+    transpose hook of the ``sharded`` pure backend (same stored-factor
+    layout) and the oracle the ``pallas`` backend's own transposed
+    kernels are tested against — pallas adjoints run on Pallas now
+    (``repro.solver.pallas.transpose_solve_stored``).
 """
 
 from __future__ import annotations

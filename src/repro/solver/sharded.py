@@ -15,7 +15,9 @@ The pure-function contract: the resolved ``Mesh`` (hashable) rides in the
 /``lax.scan`` like any other — the ``shard_map`` is retraced only when the
 mesh itself changes.  The adjoint solve runs the replicated reference
 transposed sweeps on the same stored factor (transposed systems are just as
-independent; distributing them is a perf follow-up, not a correctness one).
+independent; distributing them — and composing this mesh layer with the
+sweep engine's streamed Pallas kernels per device — is the ROADMAP's
+sharded x streamed follow-up, a perf item, not a correctness one).
 """
 
 from __future__ import annotations

@@ -1,0 +1,243 @@
+"""Large-N adjoints on Pallas + streamed batch mode past the VMEM wall.
+
+The two ROADMAP items the sweep engine closed:
+
+  * ``grad(solve)`` at N >= 12288 (where no resident kernel fits) must run
+    the engine's STREAMED TRANSPOSED Pallas kernels — asserted by poisoning
+    the reference transposed sweeps — and match a float64 reference
+    gradient, for tridiag + penta x dirichlet + periodic.
+  * ``mode="batch"`` past the old VMEM wall must stay on the pallas
+    backend (the fused factorisation's c_hat / gamma+delta scratch spills
+    to HBM between the two passes), bit-exact vs the resident batch kernel
+    on ragged N/M and NaN-clean under ``jax_debug_nans``.
+"""
+
+import contextlib
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.solver.reference as solver_reference
+from repro.kernels import ops as kops
+from repro.solver import BandedSystem, factorize, solve
+from repro.solver import pallas as solver_pallas
+
+BIG_N = 12288          # no resident tile fits (see test_streamed_solvers)
+BATCH_WALL_N = 8192    # resident batch needs 6*N*128*4 B > the 12 MiB budget
+
+
+@contextlib.contextmanager
+def _no_reference_transpose(monkeypatch):
+    """Poison the reference transposed sweeps: any adjoint that falls back
+    off Pallas fails loudly instead of silently losing the fast path."""
+    def boom(*args, **kwargs):
+        raise AssertionError(
+            "adjoint fell back to reference.transpose_solve_stored")
+    monkeypatch.setattr(solver_reference, "transpose_solve_stored", boom)
+    try:
+        yield
+    finally:
+        monkeypatch.undo()
+
+
+@contextlib.contextmanager
+def _debug_nans():
+    jax.config.update("jax_debug_nans", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_debug_nans", False)
+
+
+def _big_system(bandwidth, periodic, dtype=jnp.float32):
+    if bandwidth == 3:
+        return BandedSystem.tridiag(-0.4, 1.8, -0.4, n=BIG_N,
+                                    periodic=periodic, dtype=dtype)
+    return BandedSystem.penta(0.11, -0.44, 1.66, -0.44, 0.11, n=BIG_N,
+                              periodic=periodic, dtype=dtype)
+
+
+def _loss(fact, rhs):
+    return jnp.sum(solve(fact, rhs) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Large-N gradients: streamed transposed Pallas kernels, fp64 parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("periodic", [False, True])
+@pytest.mark.parametrize("bandwidth", [3, 5])
+def test_large_n_grad_runs_pallas_and_matches_fp64(bandwidth, periodic,
+                                                   monkeypatch):
+    system = _big_system(bandwidth, periodic)
+    fact = factorize(system, backend="auto")
+    assert fact.backend == "pallas"
+    assert fact.meta.opt("block_n") is not None     # streamed regime
+
+    rng = np.random.default_rng(bandwidth * 2 + periodic)
+    rhs32 = jnp.asarray(rng.normal(size=(BIG_N, 8)).astype(np.float32))
+
+    with _no_reference_transpose(monkeypatch):
+        g32 = jax.grad(_loss, argnums=1)(fact, rhs32)
+
+    # float64 reference oracle for the same gradient
+    jax.config.update("jax_enable_x64", True)
+    try:
+        sys64 = _big_system(bandwidth, periodic, dtype=jnp.float64)
+        fact64 = factorize(sys64, backend="reference")
+        rhs64 = jnp.asarray(np.asarray(rhs32, np.float64))
+        g64 = jax.grad(_loss, argnums=1)(fact64, rhs64)
+        g64 = np.asarray(g64)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+    scale = max(np.abs(g64).max(), 1e-30)
+    err = np.abs(np.asarray(g32, np.float64) - g64).max() / scale
+    assert err < 2e-4, f"relative grad error {err}"
+
+
+def test_large_n_diagonal_cotangents_flow_through_pallas(monkeypatch):
+    """The dA cotangents (diagonal leaves) also ride the Pallas adjoint."""
+    system = _big_system(3, False)
+    fact = factorize(system, backend="auto")
+    rng = np.random.default_rng(3)
+    rhs = jnp.asarray(rng.normal(size=(BIG_N, 4)).astype(np.float32))
+
+    def loss_of_fact(f):
+        return _loss(f, rhs)
+
+    with _no_reference_transpose(monkeypatch):
+        bar = jax.grad(loss_of_fact)(fact)
+    ref = jax.grad(loss_of_fact)(factorize(system, backend="reference"))
+    for g_p, g_r in zip(bar.diagonals, ref.diagonals):
+        assert np.isfinite(np.asarray(g_p)).all()
+        np.testing.assert_allclose(np.asarray(g_p), np.asarray(g_r),
+                                   rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("uniform", [False, True])
+def test_uniform_transposed_solve_is_jittable(uniform, monkeypatch):
+    """The transposed uniform kernels read eps from the (1, 1) operand —
+    jit over a traced Factorization must not concretise it."""
+    n, m = 96, 32
+    one = np.ones(n, np.float32)
+    s = 0.11
+    system = BandedSystem.penta(s * one, -4 * s * one, (1 + 6 * s) * one,
+                                -4 * s * one, s * one,
+                                mode="uniform" if uniform else "constant")
+    fact = factorize(system, backend="pallas", block_n=32)
+    rng = np.random.default_rng(9)
+    rhs = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    with _no_reference_transpose(monkeypatch):
+        g = jax.jit(jax.grad(_loss, argnums=1))(fact, rhs)
+    g_ref = jax.grad(_loss, argnums=1)(
+        factorize(system, backend="reference"), rhs)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Streamed batch mode: bit-exact vs resident, past the wall, NaN-clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,block_n,block_m", [
+    (64, 128, 16, 128),
+    (100, 70, 32, 64),      # ragged N and M -> sweep + lane padding
+    (33, 192, 8, 128),      # odd N
+])
+def test_batch_streamed_matches_resident_bit_exact(n, m, block_n, block_m):
+    rng = np.random.default_rng(n * 3 + m)
+    a = rng.uniform(-1, 1, (n, m)).astype(np.float32)
+    c = rng.uniform(-1, 1, (n, m)).astype(np.float32)
+    b = (np.abs(a) + np.abs(c) + 2.5).astype(np.float32)
+    d = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    res = kops.thomas_batch(*map(jnp.asarray, (a, b, c)), d,
+                            block_m=block_m, interpret=True)
+    got = kops.thomas_batch(*map(jnp.asarray, (a, b, c)), d,
+                            block_m=block_m, block_n=block_n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(res))
+
+    pa, pb, pd, pe = (rng.uniform(-1, 1, (n, m)).astype(np.float32)
+                      for _ in range(4))
+    pc = (np.abs(pa) + np.abs(pb) + np.abs(pd) + np.abs(pe) + 4.0).astype(
+        np.float32)
+    args = list(map(jnp.asarray, (pa, pb, pc, pd, pe)))
+    res5 = kops.penta_batch(*args, d, block_m=block_m, interpret=True)
+    got5 = kops.penta_batch(*args, d, block_m=block_m, block_n=block_n,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(got5), np.asarray(res5))
+
+
+def test_batch_mode_streams_past_the_vmem_wall():
+    """The acceptance bar: a batch solve at an N no resident tile holds
+    must stay on the pallas backend (streamed) and match reference."""
+    m = 130
+    system = BandedSystem.tridiag(-0.4, 1.8, -0.4, n=BATCH_WALL_N,
+                                  mode="batch", batch=m)
+    assert solver_pallas.auto_block_m(system) is None   # resident: no fit
+    ok, why = solver_pallas.supports(system)
+    assert ok and "streamed" in why
+
+    fact = factorize(system, backend="auto")
+    assert fact.backend == "pallas"
+    assert fact.meta.opt("block_n") is not None
+
+    rng = np.random.default_rng(1)
+    rhs = jnp.asarray(rng.normal(size=(BATCH_WALL_N, m)).astype(np.float32))
+    got = jax.jit(solve)(fact, rhs)
+    want = solve(factorize(system, backend="reference"), rhs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batch_grad_past_the_wall_stays_on_pallas(monkeypatch):
+    """Batch adjoints roll the per-lane diagonals and reuse the forward
+    batch kernels — streamed here, and never the reference sweeps."""
+    m = 70
+    system = BandedSystem.tridiag(-0.4, 1.8, -0.4, n=BATCH_WALL_N,
+                                  mode="batch", batch=m)
+    fact = factorize(system, backend="auto")
+    assert fact.backend == "pallas"
+    rng = np.random.default_rng(2)
+    rhs = jnp.asarray(rng.normal(size=(BATCH_WALL_N, m)).astype(np.float32))
+    with _no_reference_transpose(monkeypatch):
+        g = jax.grad(_loss, argnums=1)(fact, rhs)
+    g_ref = jax.grad(_loss, argnums=1)(
+        factorize(system, backend="reference"), rhs)
+    scale = np.abs(np.asarray(g_ref)).max()
+    assert np.abs(np.asarray(g) - np.asarray(g_ref)).max() / scale < 1e-4
+
+
+def test_batch_streamed_is_nan_clean():
+    """Identity padding on BOTH axes of the main diagonal: the fused
+    factorisation divides in-kernel, so zero-padded sweep rows (and dead
+    lanes) would compute 1/0 without it."""
+    n, m = 100, 70          # pads N 100 -> 128 at block_n=32, M 70 -> 128
+    rng = np.random.default_rng(4)
+    a = rng.uniform(-1, 1, (n, m)).astype(np.float32)
+    c = rng.uniform(-1, 1, (n, m)).astype(np.float32)
+    b = (np.abs(a) + np.abs(c) + 2.5).astype(np.float32)
+    d = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    with _debug_nans():
+        x = kops.thomas_batch(*map(jnp.asarray, (a, b, c)), d,
+                              block_m=128, block_n=32, interpret=True)
+    assert np.isfinite(np.asarray(x)).all()
+
+
+def test_transposed_streamed_is_nan_clean():
+    """Sweep-axis zero padding of the SHIFTED coefficient rows stays
+    finite under jax_debug_nans (the transposed kernels never divide)."""
+    n, m = 100, 70
+    rng = np.random.default_rng(5)
+    a = rng.uniform(-1, 1, n).astype(np.float32)
+    c = rng.uniform(-1, 1, n).astype(np.float32)
+    b = (np.abs(a) + np.abs(c) + 2.5).astype(np.float32)
+    from repro.core import thomas_factor
+    f = thomas_factor(*map(jnp.asarray, (a, b, c)))
+    d = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    with _debug_nans():
+        x = kops.thomas_constant(f, d, block_m=128, block_n=32,
+                                 interpret=True, transposed=True)
+    assert np.isfinite(np.asarray(x)).all()

@@ -289,15 +289,25 @@ def test_auto_tune_streams_explicit_oversize_block_m():
 
 def test_auto_still_falls_back_when_nothing_fits(monkeypatch):
     """A budget too small even for the smallest streamed chunk must keep
-    the graceful reference fallback (and batch mode cannot stream)."""
+    the graceful reference fallback; batch mode now STREAMS past the wall
+    (the engine spills the fused factor scratch to HBM) so only
+    periodic x batch still lacks a kernel."""
     system = BandedSystem.tridiag(-0.4, 1.8, -0.4, n=64)
     monkeypatch.setattr(kcommon, "VMEM_BUDGET_BYTES", 1024)
     assert plan(system, backend="auto").backend == "reference"
+    monkeypatch.undo()
 
     big_batch = BandedSystem.tridiag(-0.4, 1.8, -0.4, n=BIG_N * 2,
                                      mode="batch", batch=128)
+    assert solver_pallas.auto_block_m(big_batch) is None  # resident: no fit
     ok, why = solver_pallas.supports(big_batch)
-    assert not ok and "batch" in why
+    assert ok and "streamed" in why
+
+    periodic_batch = BandedSystem.tridiag(-0.4, 1.8, -0.4, n=64,
+                                          mode="batch", batch=128,
+                                          periodic=True)
+    ok, why = solver_pallas.supports(periodic_batch)
+    assert not ok and "periodic" in why
 
 
 def test_streamed_traffic_model_is_honest():
