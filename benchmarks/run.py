@@ -296,6 +296,40 @@ def bench_batch_streamed():
                 if backend == "auto" else
                 f"solver_tridiag_batch_{label}_N{n}_M{m}", t,
                 backend=label, n=n, m=m, derived=derived)
+    bench_sharded()
+
+
+def bench_sharded():
+    """The sharded x streamed composition: the ``sharded`` backend running
+    the engine's Pallas kernels per device inside shard_map (vs the old
+    per-shard reference sweeps, kept as the ``kernels="reference"`` row).
+    The engine dispatch is asserted so the composition cannot silently
+    degrade back to reference sweeps."""
+    from repro.solver import BandedSystem, plan
+    sigma = 0.4
+    n, m = 256, 512
+    d = _rhs(n, m)
+    system = BandedSystem.tridiag(-sigma, 1 + 2 * sigma, -sigma, n=n)
+    for kernels in ("reference", "auto"):
+        p = plan(system, backend="sharded", kernels=kernels)
+        if kernels == "auto":
+            assert p.impl.kernels == "pallas", "sharded kernel dispatch regressed"
+        label = p.impl.kernels
+        t = _timeit(jax.jit(p.solve), d, reps=2)
+        _record(f"solver_tridiag_constant_sharded_{label}_N{n}_M{m}", t,
+                backend="sharded", n=n, m=m,
+                derived=f"shards={p.impl.n_shards}_kernels={label}")
+    # large-N: streamed split-N chunks per shard (block_n frozen in meta)
+    n = 16384
+    d = _rhs(n, m)
+    p = plan(BandedSystem.tridiag(-sigma, 1 + 2 * sigma, -sigma, n=n),
+             backend="sharded")
+    assert p.impl.kernels == "pallas", "sharded kernel dispatch regressed"
+    assert p.impl.block_n is not None, "expected streamed kernels per shard"
+    t = _timeit(jax.jit(p.solve), d, reps=2)
+    _record(f"solver_tridiag_constant_sharded_streamed_N{n}_M{m}", t,
+            backend="sharded", n=n, m=m,
+            derived=f"shards={p.impl.n_shards}_block_n={p.impl.block_n}")
 
 
 # ---------------------------------------------------------------------------
@@ -378,9 +412,10 @@ TABLES = {
     "fig2": bench_fig2_tridiag,
     "fig3": bench_fig3_penta,
     "fig4": bench_fig4_uniform,
-    # bench_backends_streamed / bench_batch_streamed chain off "backends",
-    # and bench_grad_solve_streamed off "grad" — not registered separately,
-    # so selecting several tables never records duplicate rows.
+    # bench_backends_streamed / bench_batch_streamed / bench_sharded chain
+    # off "backends", and bench_grad_solve_streamed off "grad" — not
+    # registered separately, so selecting several tables never records
+    # duplicate rows.
     "backends": bench_backends,
     "grad": bench_grad_solve,
     "memory": bench_memory_table,

@@ -9,7 +9,11 @@ shim.  Both retarget across the backend registry:
   * ``reference`` — pure-JAX scan sweeps (the portable oracle),
   * ``pallas``    — the interleaved TPU kernels (interpret mode on CPU),
   * ``sharded``   — systems sharded over a device mesh, LHS replicated,
+    each device running the engine's Pallas kernels on its local slice,
   * ``auto``      — pallas when the working set fits VMEM, else reference.
+
+This file is the runnable superset of the README quickstart block (CI
+executes both).
 
 ``mode="constant"`` vs ``mode="batch"`` is the paper's storage comparison
 (cuThomasConstantBatch vs cuThomasBatch).
@@ -72,9 +76,14 @@ print(f"penta total: {pc/2**20:.1f} MiB vs {pb/2**20:.1f} MiB "
       f"-> {100*(1-pc/pb):.1f}% saved (paper: ~83%)")
 
 # --- the sharded backend: LHS replicated per device, systems sharded --------
+# Each shard runs the sweep engine's Pallas kernels on its local slice
+# (per-device tuned block_m/block_n; kernels="reference" would keep the
+# old scan sweeps inside shard_map).
 p_sh = plan(system, backend="sharded")
 x_sh = p_sh.solve(rhs)
-print(f"sharded ({p_sh.impl.n_shards} shard(s)) vs reference max |dx|:",
+print(f"sharded ({p_sh.impl.n_shards} shard(s), per-shard "
+      f"kernels={p_sh.impl.kernels}, block_m={p_sh.impl.block_m}) "
+      f"vs reference max |dx|:",
       float(jnp.max(jnp.abs(x_sh - x_ref))))
 
 # --- transformation-native: factor ONCE, scan a whole time loop -------------

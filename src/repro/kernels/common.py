@@ -65,6 +65,16 @@ def pad_lanes(x: jax.Array, block_m: int, *,
     return pad_to_multiple(x, block_m, -1, value=1.0 if identity else 0.0)
 
 
+def shard_lanes(m: int, n_shards: int) -> int:
+    """Per-device lane count after the mesh padding of the ``sharded``
+    backend: M pads to a multiple of the shard count, then splits evenly.
+
+    This is the lane count the per-device auto-tuner and the sharded
+    traffic model reason about — each device's kernels additionally pad
+    their local slice to the lane-tile multiple (``pad_lanes``)."""
+    return -(-m // n_shards)
+
+
 def pad_sweep(x: jax.Array, block_n: int, axis: int = 0, *,
               identity: bool = False) -> tuple[jax.Array, int]:
     """Zero-pad the sweep (N) axis to a multiple of the streamed N-chunk.

@@ -217,6 +217,20 @@ class SweepSpec:
     def traffic_bytes(self, n: int, m: int, dtype=jnp.float32) -> int:
         return self.traffic_words(n, m) * jnp.dtype(dtype).itemsize
 
+    def sharded_traffic_words(self, n: int, m: int, n_shards: int) -> int:
+        """PER-DEVICE HBM<->VMEM words when the M axis is sharded over
+        ``n_shards`` devices and each device runs this spec's kernels on
+        its local slice (the sharded x streamed composition).
+
+        The solve needs no collectives, so the per-device traffic is just
+        ``traffic_words`` of the local lane count — for the shared layout
+        the ``lhs_rows * n`` LHS stream does NOT shrink with the mesh
+        (one replicated factor copy per device, the paper's storage idea
+        applied per device), while the RHS terms divide by the shard
+        count (up to mesh padding)."""
+        from .common import shard_lanes
+        return self.traffic_words(n, shard_lanes(m, n_shards))
+
     def vmem_counts(self) -> tuple:
         """(n_rhs_blocks, n_lhs_vecs, n_carry_rows) for the VMEM budget
         checks (``common.check_vmem`` / ``check_vmem_streamed``).  For the

@@ -272,6 +272,23 @@ def solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int, m: int, *,
     return spec.traffic_bytes(n, m, dtype)
 
 
+def sharded_solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int,
+                                     m: int, n_shards: int, *,
+                                     dtype=jnp.float32, streamed: bool = False,
+                                     transposed: bool = False) -> int:
+    """PER-DEVICE bytes when the ``sharded`` backend runs this module's
+    kernels on each device's local slice of the interleaved batch
+    (``repro.solver.sharded`` with engine kernels active).  The solve has
+    no collectives, so this IS the single-device model at the local lane
+    count (``shard_lanes``) — same ``SweepSpec`` derivation, so the
+    sharded x streamed composition can never silently miss the roofline
+    table."""
+    from .common import shard_lanes
+    return solver_hbm_traffic_bytes(bandwidth, mode, n,
+                                    shard_lanes(m, n_shards), dtype=dtype,
+                                    streamed=streamed, transposed=transposed)
+
+
 # ---------------------------------------------------------------------------
 # Distributed batch solving: one LHS copy per DEVICE, systems sharded.
 # ---------------------------------------------------------------------------

@@ -30,12 +30,22 @@ Backends live in a registry (see ``registry.register_backend``):
     (``interpret=True`` automatically off-TPU).
   * ``sharded``   — ``shard_map`` over a device mesh: the LHS replicated
     per device (the paper's storage saving, applied per device), the M
-    system axis sharded, zero collectives in the solve.
+    system axis sharded, zero collectives in the solve — and each device
+    running the sweep engine's Pallas kernels (resident or HBM-streamed,
+    per a tuner sized to the LOCAL shard) on its slice (DESIGN.md §7).
 
 ``backend="auto"`` picks ``pallas`` when the kernel working set fits the
 VMEM budget and falls back to ``reference`` otherwise (instead of raising).
 
-See DESIGN.md §5 for the full API contract.
+The traced/static contract (DESIGN.md §5.1) in one line: array data (the
+stored factor, the spec diagonals, the RHS) traces as pytree leaves;
+everything a compiler must specialise on (bandwidth, N, mode, boundary,
+backend name, RESOLVED options — tuned blocks, the concrete mesh) is
+hashable static aux data resolved once in ``factorize``, never inside a
+trace.  ``MODES`` is the tuple of storage-mode names
+(``("constant", "uniform", "batch")`` — the paper's comparison axis).
+
+See DESIGN.md §5 for the full API contract, and README.md for the tour.
 """
 
 from .functional import (Factorization, SolveMeta, factorize,

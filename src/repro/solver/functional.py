@@ -98,9 +98,12 @@ class Factorization:
 
     @property
     def backend(self) -> str:
+        """Resolved pure-registry backend name (static, from ``meta``)."""
         return self.meta.backend
 
     def describe(self) -> str:
+        """Human-readable one-liner, e.g. ``tridiag/periodic/constant/
+        N=512@pallas`` (static meta only — safe under tracing)."""
         kind = "tridiag" if self.meta.bandwidth == 3 else "penta"
         bc = "periodic" if self.meta.periodic else "dirichlet"
         return (f"{kind}/{bc}/{self.meta.mode}/N={self.meta.n}"
@@ -143,8 +146,12 @@ def factorize(system: BandedSystem, backend: str = "auto",
     ``sharded``) or ``"auto"`` (pallas when the kernel fits — VMEM-resident
     or HBM-streamed split-N — else reference).  Backend options
     (``method``, ``unroll``, ``block_m``, ``block_n``, ``interpret``,
-    ``mesh``, ``batch_axis``) are resolved here — at trace time — and
-    frozen into the static meta.
+    ``mesh``, ``batch_axis``, and the sharded backend's per-shard
+    ``kernels`` policy) are RESOLVED here — auto-tuning, mesh defaulting,
+    kernel-vs-reference fallbacks all happen outside any trace — and
+    frozen into the static meta; the returned ``Factorization``'s traced
+    leaves are only the stored factor and the spec diagonals, so it
+    crosses ``jit``/``vmap``/``grad``/``lax.scan`` freely.
     """
     backend = resolve_backend_name(system, backend, opts.get("block_m"),
                                    opts.get("block_n"))
@@ -197,6 +204,11 @@ def transpose_solve(factorization: Factorization,
 
 
 def with_options(factorization: Factorization, **updates) -> Factorization:
-    """A copy of ``factorization`` with per-call option overrides (static)."""
+    """A copy of ``factorization`` with per-call option overrides.
+
+    Options are STATIC meta (``None`` values are ignored, not unset): a
+    jitted ``solve`` retraces when an option actually changes, exactly as
+    it would for a new shape.  The traced leaves are shared, not copied.
+    """
     return dataclasses.replace(factorization,
                                meta=factorization.meta.with_options(**updates))

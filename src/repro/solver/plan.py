@@ -19,9 +19,10 @@ any later registration) or ``"auto"``:
     oversize working sets degrade gracefully.
 
 Backend-specific options ride as keyword arguments (``block_m``,
-``unroll``, ``interpret``, ``method``, ``mesh``, ``batch_axis``); every
-backend accepts the full option set and ignores what it does not use, so a
-sweep can flip ``backend=`` with one argument.
+``block_n``, ``unroll``, ``interpret``, ``method``, ``mesh``,
+``batch_axis``, ``kernels``); every backend accepts the full option set
+and ignores what it does not use, so a sweep can flip ``backend=`` with
+one argument.
 """
 
 from __future__ import annotations
@@ -45,7 +46,13 @@ def _nbytes(tree: Any) -> int:
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Plan:
-    """A prepared solve: spec + resolved backend + backend state."""
+    """A prepared solve: spec + resolved backend + backend state.
+
+    A ``Plan`` is host-side state (NOT a pytree — it does not cross
+    ``jit`` boundaries itself); its ``factorization`` property exposes the
+    transformation-native pytree underneath, and ``Plan.solve`` routes
+    through the same ``custom_vjp``-wrapped solve, so plan-based call
+    sites get identical numerics and gradients."""
 
     system: BandedSystem
     backend: str
@@ -85,6 +92,12 @@ _ALIASES = ALIASES
 
 def plan(system: BandedSystem, backend: str = "auto", **opts) -> Plan:
     """Prepare a solve for ``system`` on ``backend``.
+
+    ``backend`` resolves at call time (``"auto"`` -> pallas when a kernel
+    fits, else reference); ``**opts`` is the union option set the module
+    docstring lists — resolution (auto-tuning, mesh defaulting, the
+    sharded backend's per-shard kernel policy) happens here, outside any
+    trace.
 
     >>> p = plan(BandedSystem.tridiag(-s, 1 + 2*s, -s, n=512, periodic=True))
     >>> x = p.solve(rhs)            # rhs: (N, M) interleaved

@@ -245,10 +245,11 @@ class ReferenceBackend:
 
     def __init__(self, system: BandedSystem, *, method: str = "scan",
                  unroll: int = 1, block_m=None, block_n=None, interpret=None,
-                 mesh=None, batch_axis=None):
-        # block_m / block_n / interpret / mesh are accepted (and ignored) so
-        # that callers can flip `backend=` without changing the option set.
-        del block_m, block_n, interpret, mesh, batch_axis
+                 mesh=None, batch_axis=None, kernels=None):
+        # block_m / block_n / interpret / mesh / kernels are accepted (and
+        # ignored) so callers can flip `backend=` without changing the
+        # option set.
+        del block_m, block_n, interpret, mesh, batch_axis, kernels
         from .functional import factorize
         self.system = system
         self.method = method

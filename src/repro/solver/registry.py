@@ -61,6 +61,8 @@ def register_pure_backend(name: str, *, build, solve, transpose_solve):
 
 
 def get_pure_backend(name: str) -> PureBackend:
+    """The pure hooks behind ``factorize``/``solve`` for ``name``
+    (KeyError with the available names for class-only registrations)."""
     try:
         return _PURE_REGISTRY[name]
     except KeyError:
@@ -83,6 +85,7 @@ def register_backend(name: str):
 
 
 def get_backend(name: str):
+    """The backend class registered under ``name`` (what ``plan`` uses)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -92,4 +95,5 @@ def get_backend(name: str):
 
 
 def available_backends() -> list:
+    """Sorted names of every class-registered backend."""
     return sorted(_REGISTRY)

@@ -1,0 +1,306 @@
+"""The sharded x streamed composition (DESIGN.md §7): the ``sharded``
+backend dispatching the sweep engine's Pallas kernels per device inside
+``shard_map``.
+
+Asserted here, on the conftest's 4-device host CPU mesh (interpret-mode
+kernels):
+
+  * every supported (bandwidth, boundary, mode) combination runs the
+    ENGINE kernels per shard (``meta kernels == "pallas"``) and is
+    BIT-EXACT vs the single-device pallas backend in resident mode — the
+    per-lane sweep arithmetic is independent of how M was partitioned;
+  * at N large enough that no resident tile fits, the per-device tuner
+    falls through to the streamed split-N pair and parity holds vs both
+    the single-device pallas backend and the float reference (≤ 1e-5);
+  * ``grad`` through ``shard_map`` reuses the stored factor on the
+    engine's TRANSPOSED kernels (the reference transpose is poisoned);
+  * the per-device tuner sizes ``block_m`` against the LOCAL lane count
+    and prefers resident whenever the local shard fits the VMEM budget;
+  * solves cross ``jit`` and ``lax.scan`` with the mesh frozen in meta.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common as kcommon
+from repro.solver import (BandedSystem, factorize, plan, solve,
+                          transpose_solve)
+from repro.solver import sharded as solver_sharded
+
+N_SMALL = 64
+N_BIG = 12288          # past the resident VMEM wall at every block_m
+M = 24                 # deliberately lane-tile-ragged and mesh-divisible
+
+
+def _coeffs(bandwidth, n, uniform, seed=0):
+    rng = np.random.default_rng(seed + bandwidth)
+    if bandwidth == 3:
+        if uniform:
+            s, one = 0.37, np.ones(n, np.float32)
+            return -s * one, (1 + 2 * s) * one, -s * one
+        a = rng.uniform(-1, 1, n).astype(np.float32)
+        c = rng.uniform(-1, 1, n).astype(np.float32)
+        return a, (np.abs(a) + np.abs(c) + 2.5).astype(np.float32), c
+    if uniform:
+        s, one = 0.11, np.ones(n, np.float32)
+        return s * one, -4 * s * one, (1 + 6 * s) * one, -4 * s * one, s * one
+    a, b, d, e = (rng.uniform(-1, 1, n).astype(np.float32) for _ in range(4))
+    c = (np.abs(a) + np.abs(b) + np.abs(d) + np.abs(e) + 4.0).astype(np.float32)
+    return a, b, c, d, e
+
+
+def _system(bandwidth, n, periodic, mode, m=M):
+    ctor = BandedSystem.tridiag if bandwidth == 3 else BandedSystem.penta
+    return ctor(*_coeffs(bandwidth, n, uniform=(mode == "uniform")), n=n,
+                periodic=periodic, mode=mode,
+                batch=m if mode == "batch" else None)
+
+
+def _rhs(n, m, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+
+
+def test_mesh_is_multi_device():
+    assert jax.device_count() >= 4, "conftest should force 4 host devices"
+
+
+@pytest.mark.parametrize("mode", ["constant", "uniform", "batch"])
+@pytest.mark.parametrize("periodic", [False, True])
+@pytest.mark.parametrize("bandwidth", [3, 5])
+def test_resident_sharded_kernels_bitexact_vs_pallas(bandwidth, periodic,
+                                                     mode):
+    """Supported modes run the engine's kernels per shard and match the
+    single-device pallas backend BIT-exactly in resident mode (and the
+    reference sweeps to fp32 tolerance); periodic x batch degrades to
+    reference sweeps per shard instead of raising."""
+    system = _system(bandwidth, N_SMALL, periodic, mode)
+    rhs = _rhs(N_SMALL, M)
+    fact = factorize(system, backend="sharded")
+    x = solve(fact, rhs)
+
+    if periodic and mode == "batch":
+        assert fact.meta.opt("kernels") == "reference"
+    else:
+        assert fact.meta.opt("kernels") == "pallas"
+        assert fact.meta.opt("block_n") is None, "resident expected at N=64"
+        x_pallas = solve(factorize(system, backend="pallas"), rhs)
+        assert jnp.array_equal(x, x_pallas), \
+            "sharded kernel dispatch must be bit-exact vs single-device pallas"
+    x_ref = solve(factorize(system, backend="reference"), rhs)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["constant", "uniform", "batch"])
+@pytest.mark.parametrize("periodic", [False, True])
+@pytest.mark.parametrize("bandwidth", [3, 5])
+def test_streamed_sharded_kernels_parity_large_n(bandwidth, periodic, mode):
+    """N past the resident wall: the per-device tuner falls through to the
+    HBM-streamed split-N pair inside shard_map; parity vs the single-device
+    streamed pallas backend and vs the reference sweeps (<= 1e-5)."""
+    if periodic and mode == "batch":
+        pytest.skip("no Pallas kernel for periodic per-system-LHS solves")
+    m = 8                                  # keep interpret-mode cost down
+    system = _system(bandwidth, N_BIG, periodic, mode, m=m)
+    rhs = _rhs(N_BIG, m)
+    fact = factorize(system, backend="sharded")
+    assert fact.meta.opt("kernels") == "pallas"
+    assert fact.meta.opt("block_n") is not None, \
+        "expected the streamed kernels past the VMEM wall"
+    x = jax.jit(solve)(fact, rhs)
+
+    fact_p = factorize(system, backend="pallas")
+    assert fact_p.meta.opt("block_n") is not None
+    x_pallas = solve(fact_p, rhs)
+    if periodic:
+        # the kernel output is bit-identical; the O(M) corner-correction
+        # epilogue runs outside the kernel, where XLA may fuse differently
+        # inside shard_map — last-ulp noise, far inside the 1e-5 criterion
+        np.testing.assert_allclose(np.asarray(x), np.asarray(x_pallas),
+                                   rtol=1e-6, atol=1e-7)
+    else:
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(x_pallas))
+
+    x_ref = solve(factorize(system, backend="reference"), rhs)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grad_through_shard_map_reuses_stored_factor(monkeypatch):
+    """grad(solve) on the sharded backend runs the engine's TRANSPOSED
+    kernels per shard on the SAME stored factor — the reference transpose
+    sweeps are poisoned to prove they are never consulted."""
+    system = _system(3, N_BIG, True, "constant", m=8)
+    rhs = _rhs(N_BIG, 8)
+    fact = factorize(system, backend="sharded")
+    assert fact.meta.opt("kernels") == "pallas"
+    assert fact.meta.opt("block_n") is not None
+
+    def _poisoned(*a, **k):
+        raise AssertionError("sharded adjoint fell back to reference sweeps")
+
+    monkeypatch.setattr(solver_sharded, "transpose_solve_stored", _poisoned)
+    g = jax.grad(lambda r: jnp.sum(solve(fact, r) ** 2))(rhs)
+
+    fact_p = factorize(system, backend="pallas")
+    g_pallas = jax.grad(lambda r: jnp.sum(solve(fact_p, r) ** 2))(rhs)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g_pallas))
+
+    # the adjoint entry point distributes too (same poison still in place)
+    lam = transpose_solve(fact, rhs)
+    lam_p = transpose_solve(fact_p, rhs)
+    np.testing.assert_array_equal(np.asarray(lam), np.asarray(lam_p))
+
+
+def test_grad_flows_to_diagonals_through_mesh():
+    """Diagonal cotangents (the PDE-constrained-optimisation carriers) agree
+    with the reference backend through the shard_map dispatch."""
+    n, m = 256, 16
+    coeffs = _coeffs(3, n, uniform=False)
+    rhs = _rhs(n, m)
+
+    def loss(backend):
+        def f(diags):
+            system = BandedSystem.tridiag(*diags, n=n)
+            return jnp.sum(solve(factorize(system, backend=backend), rhs) ** 2)
+        return f
+
+    diags = tuple(map(jnp.asarray, coeffs))
+    g_sh = jax.grad(loss("sharded"))(diags)
+    g_ref = jax.grad(loss("reference"))(diags)
+    for gs, gr in zip(g_sh, g_ref):
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(gr),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_local_tuner_sizes_block_m_to_the_shard():
+    """batch mode, M=512 over 4 devices: the single-device tuner would pick
+    block_m=512 (the global lane count), but each shard only holds 128
+    lanes — the per-device tuner must size to the LOCAL slice."""
+    from repro.solver import pallas as solver_pallas
+    system = _system(3, N_SMALL, False, "batch", m=512)
+    assert solver_pallas.auto_tune(system) == (512, None)
+    tuned = solver_sharded.local_tune(system, n_shards=4)
+    assert tuned == (128, None), "tuner must see the local lane count"
+    fact = factorize(system, backend="sharded")
+    assert fact.meta.opt("block_m") == 128
+    assert fact.meta.opt("block_n") is None
+
+
+def test_local_tuner_prefers_resident_when_local_shard_fits(monkeypatch):
+    """Resident is preferred whenever the local working set fits the
+    budget; squeezing the budget flips the same system to streamed."""
+    system = _system(3, 2048, False, "constant")
+    fact = factorize(system, backend="sharded")
+    assert fact.meta.opt("kernels") == "pallas"
+    assert fact.meta.opt("block_n") is None, \
+        "per-device auto-tune must pick resident when the shard fits"
+    # resident at N=2048 needs >= (2*2048*128 + 3*2048)*4 ~ 2.1 MB even at
+    # the smallest lane tile, but a (256, 256) streamed chunk holds ~0.5 MB
+    # -> under a 1 MB budget the tuner must fall through to streamed
+    monkeypatch.setattr(kcommon, "VMEM_BUDGET_BYTES", 1_000_000)
+    fact = factorize(system, backend="sharded")
+    assert fact.meta.opt("kernels") == "pallas"
+    assert fact.meta.opt("block_n") is not None
+
+
+def test_kernels_policy_knob():
+    """kernels="reference" keeps the scan sweeps; kernels="pallas" raises
+    for unsupported modes instead of silently degrading."""
+    system = _system(3, N_SMALL, False, "constant")
+    fact = factorize(system, backend="sharded", kernels="reference")
+    assert fact.meta.opt("kernels") == "reference"
+    assert fact.meta.opt("block_m") is None
+    x = solve(fact, _rhs(N_SMALL, M))
+    x_ref = solve(factorize(system, backend="reference"), _rhs(N_SMALL, M))
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_ref),
+                               rtol=1e-5, atol=1e-5)
+
+    with pytest.raises(ValueError, match="kernels must be one of"):
+        factorize(system, backend="sharded", kernels="nope")
+
+    # the policy binds the stored layout + tuned blocks at factorize time:
+    # flipping it per call via with_options must fail loudly, both ways
+    from repro.solver import with_options
+    with pytest.raises(ValueError, match="resolved at factorize time"):
+        solve(with_options(fact, kernels="pallas"), _rhs(N_SMALL, M))
+    # overriding block_m alongside kernels must not slip past the guard
+    with pytest.raises(ValueError, match="resolved at factorize time"):
+        solve(with_options(fact, kernels="pallas", block_m=128),
+              _rhs(N_SMALL, M))
+    fact_k = factorize(system, backend="sharded")   # kernels resolved: pallas
+    with pytest.raises(ValueError, match="resolved at factorize time"):
+        solve(with_options(fact_k, kernels="reference"), _rhs(N_SMALL, M))
+
+    periodic_batch = _system(3, N_SMALL, True, "batch")
+    with pytest.raises(NotImplementedError, match="cannot run the engine"):
+        factorize(periodic_batch, backend="sharded", kernels="pallas")
+    # auto degrades per-shard instead
+    assert factorize(periodic_batch,
+                     backend="sharded").meta.opt("kernels") == "reference"
+
+
+def test_sharded_kernels_inside_lax_scan():
+    """Factor once, scan a CN loop: the mesh rides the static meta, so the
+    shard_map dispatch traces exactly once inside one compiled program."""
+    sigma = 0.4
+    system = BandedSystem.tridiag(-sigma, 1 + 2 * sigma, -sigma, n=N_SMALL,
+                                  periodic=True)
+    fact = factorize(system, backend="sharded")
+    assert fact.meta.opt("kernels") == "pallas"
+    field0 = _rhs(N_SMALL, M)
+
+    def body(field, _):
+        lap = jnp.roll(field, 1, 0) - 2 * field + jnp.roll(field, -1, 0)
+        return solve(fact, field + sigma * lap), None
+
+    scanned, _ = jax.lax.scan(body, field0, None, length=3)
+
+    fact_p = factorize(system, backend="pallas")
+
+    def body_p(field, _):
+        lap = jnp.roll(field, 1, 0) - 2 * field + jnp.roll(field, -1, 0)
+        return solve(fact_p, field + sigma * lap), None
+
+    want, _ = jax.lax.scan(body_p, field0, None, length=3)
+    np.testing.assert_array_equal(np.asarray(scanned), np.asarray(want))
+
+
+def test_plan_frontend_exposes_tuned_shard_meta():
+    """plan(system, backend="sharded") surfaces the resolved per-shard
+    tuning (the acceptance-criterion spelling)."""
+    p = plan(_system(3, N_SMALL, False, "constant"), backend="sharded")
+    assert p.backend == "sharded"
+    assert p.impl.kernels == "pallas"
+    assert p.impl.n_shards == jax.device_count()
+    assert p.impl.block_m is not None
+    x = p.solve(_rhs(N_SMALL, M))
+    assert x.shape == (N_SMALL, M)
+
+
+def test_sharded_traffic_model_derives_from_spec():
+    """The sharded x streamed roofline entry is the per-device slice of the
+    single-device spec model — LHS stream replicated, RHS terms sharded."""
+    from repro.kernels.engine import find_spec
+    from repro.kernels.ops import (sharded_solver_hbm_traffic_bytes,
+                                   solver_hbm_traffic_bytes)
+    n, m, shards = 4096, 1024, 4
+    for mode, streamed in (("constant", False), ("constant", True),
+                           ("uniform", True), ("batch", True)):
+        per_dev = sharded_solver_hbm_traffic_bytes(5, mode, n, m, shards,
+                                                   streamed=streamed)
+        spec = find_spec(5, mode, streamed=streamed)
+        assert per_dev == spec.traffic_words(n, m // shards) * 4
+        single = solver_hbm_traffic_bytes(5, mode, n, m, streamed=streamed)
+        assert per_dev < single
+    # transposed batch adjoints reuse the forward batch kernels
+    assert (sharded_solver_hbm_traffic_bytes(3, "batch", n, m, shards,
+                                             transposed=True)
+            == sharded_solver_hbm_traffic_bytes(3, "batch", n, m, shards))
+    # the per-device LHS stream does NOT shrink with the mesh
+    spec = find_spec(3, "constant")
+    words = spec.sharded_traffic_words(n, m, shards)
+    assert words == 2 * n * (m // shards) + 3 * n

@@ -1,0 +1,37 @@
+"""Execute the README's quickstart code block(s).
+
+The README is the repo's front door; a quickstart that no longer runs is
+worse than none.  This script extracts every ```python fence from
+README.md and executes them in one shared namespace, so CI fails the
+build when the front door rots.
+
+    PYTHONPATH=src python tools/check_readme.py [path/to/README.md]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.MULTILINE | re.DOTALL)
+
+
+def main() -> int:
+    readme = Path(sys.argv[1] if len(sys.argv) > 1 else "README.md")
+    blocks = FENCE.findall(readme.read_text())
+    if not blocks:
+        print(f"error: no ```python blocks found in {readme}",
+              file=sys.stderr)
+        return 1
+    ns: dict = {"__name__": "__readme__"}
+    for i, block in enumerate(blocks, 1):
+        print(f"-- running {readme} python block {i}/{len(blocks)} "
+              f"({len(block.splitlines())} lines)")
+        exec(compile(block, f"{readme}#block{i}", "exec"), ns)
+    print(f"OK: {len(blocks)} block(s) executed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
