@@ -1,0 +1,78 @@
+"""``repro.analysis`` — static verification (speclint) for the sweep engine.
+
+The declarative engine (``repro.kernels.engine``) made every banded Pallas
+solver a table lookup: a ``SweepSpec`` plus two ``PassSpec`` rows *are* the
+kernel.  That is the paper's premise made maintainable — and it means a
+one-character table edit can silently break bit-exactness, the roofline
+traffic model, or the streamed grid's carry sequencing.  PRs 3–4 each
+burned a debug cycle on exactly these defect classes (traced-eps
+concretization, dead-lane 1/0 NaNs, a hardcoded itemsize in the traffic
+accounting).  This package proves the invariants statically, before any
+solve runs:
+
+  * ``speccheck`` — structural invariants over the pass tables (carry lags
+    bounded by the order, coefficient rows inside the stacked LHS, exactly
+    one inverse-diagonal scale per pass pair, transposed twins = same
+    machine with the scale moved) PLUS an independent recount of the HBM
+    traffic and VMEM residency by abstract interpretation of the kernel
+    builders — cross-checked against ``SweepSpec.traffic_words`` /
+    ``vmem_counts`` so the roofline model can never drift from the code.
+  * ``gridcheck`` — enumerates every streamed ``BlockSpec`` index map over
+    the 2-D split-N grid: write coverage must be a bijection, reads must
+    stay in bounds, the backward chunk walk must exactly mirror the
+    forward one, and the carry scratch must be insensitive to stale state
+    at ``k == 0`` (a dropped ``reset_carry`` is a cross-lane-tile carry
+    race).
+  * ``tracecheck`` — the jit contract: every registered backend x mode
+    solves under ``jax.eval_shape`` with fully traced ``Factorization``
+    leaves (poisoning any concretization), ``SolveMeta`` stays hashable,
+    and an AST lint flags ``float(`` / ``int(`` / ``.item()`` /
+    ``np.asarray`` on potentially-traced values in ``repro.kernels`` /
+    ``repro.solver`` (``# speclint: allow-concretize`` marks legitimate
+    host-side sites).
+  * ``mutation`` — a self-test that seeds known defects (swapped
+    subtraction order, off-by-one index map, dropped ``reset_carry``,
+    baked ``float(eps)``, stale traffic/VMEM constants) and asserts each
+    checker catches its class, so the linter cannot rot into a no-op.
+  * ``nansweep`` — a registry-driven sanitizer sweep: padded / ragged /
+    dead-lane cases auto-generated for every ``REGISTRY`` spec and every
+    pure backend, run under debug-NaNs (CI's nan-guard job; a new spec can
+    no longer ship un-guarded).
+
+CLI: ``python -m repro.analysis`` (add ``--self-test`` / ``--nan-sweep``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One verification failure: which checker, on what, and why."""
+
+    checker: str   # "speccheck" | "gridcheck" | "tracecheck" | "astlint" | ...
+    subject: str   # spec name, backend/mode combo, or file:line
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.checker}] {self.subject}: {self.message}"
+
+
+def run_all(verbose: bool = False) -> list:
+    """Run every checker over the full current registry; returns findings
+    (empty = the whole support matrix is speclint-clean)."""
+    from . import gridcheck, speccheck, tracecheck
+
+    findings = []
+    for name, runner in (("speccheck", speccheck.run),
+                         ("gridcheck", gridcheck.run),
+                         ("tracecheck", tracecheck.run)):
+        got = runner()
+        if verbose:
+            print(f"{name}: {len(got)} finding(s)")
+        findings.extend(got)
+    return findings
+
+
+__all__ = ["Finding", "run_all"]

@@ -1,0 +1,89 @@
+"""CLI: ``python -m repro.analysis`` — speclint the whole support matrix.
+
+Exit code 0 = clean, 1 = findings (or a missed mutation).  Modes:
+
+  (default)     run speccheck + gridcheck + tracecheck (incl. AST lint)
+  --self-test   run the mutation self-test (each seeded defect class must
+                be caught by its checker)
+  --nan-sweep   run the registry-driven debug-NaNs sweep (CI's nan-guard)
+  --all         everything above
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import argparse
+
+# Harmless on a real accelerator; on CPU hosts this gives the sharded
+# backend the multi-device mesh some checks trace against.  Must happen
+# before jax initializes its backends.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static verification (speclint) of the sweep-kernel "
+                    "engine: pass-table invariants, streamed-grid index "
+                    "maps, the jit contract, and the traffic/VMEM "
+                    "accounting — no solver ever runs.")
+    parser.add_argument("--self-test", action="store_true",
+                        help="mutation self-test: seed known defect classes "
+                             "and require the analyzer to catch each")
+    parser.add_argument("--nan-sweep", action="store_true",
+                        help="registry-driven padded/ragged/dead-lane "
+                             "sweep under debug-NaNs")
+    parser.add_argument("--all", action="store_true",
+                        help="checkers + self-test + nan-sweep")
+    parser.add_argument("-q", "--quiet", action="store_true",
+                        help="suppress per-checker progress lines")
+    args = parser.parse_args(argv)
+
+    from repro.kernels.engine import REGISTRY
+
+    from . import run_all
+    verbose = not args.quiet
+    failed = False
+    run_checkers = args.all or not (args.self_test or args.nan_sweep)
+
+    if run_checkers:
+        findings = run_all(verbose=verbose)
+        for f in findings:
+            print(f, file=sys.stderr)
+        if findings:
+            failed = True
+        elif verbose:
+            print(f"speclint clean: {len(REGISTRY)} registered specs, "
+                  f"0 findings")
+
+    if args.self_test or args.all:
+        from . import mutation
+        if verbose:
+            print("mutation self-test:")
+        results = mutation.self_test(verbose=verbose)
+        missed = [r.name for r in results if not r.detected]
+        if missed:
+            print(f"mutation self-test MISSED: {', '.join(missed)}",
+                  file=sys.stderr)
+            failed = True
+        elif verbose:
+            print(f"mutation self-test: {len(results)}/{len(results)} "
+                  f"defect classes caught")
+
+    if args.nan_sweep or args.all:
+        from . import nansweep
+        findings = nansweep.run()
+        for f in findings:
+            print(f, file=sys.stderr)
+        if findings:
+            failed = True
+        elif verbose:
+            print(f"nan-sweep clean: {len(REGISTRY)} specs x "
+                  f"{len(nansweep.CASES)} shape classes")
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,313 @@
+"""gridcheck — prove the streamed 2-D grid's index maps and carry protocol.
+
+The streamed (split-N) kernels run on a grid ``(M/block_m, N/block_n)``
+whose LAST axis iterates fastest: for each lane tile the N-chunks execute
+sequentially and the sweep state rides a small VMEM scratch between them.
+Three things can silently go wrong, and none of them is caught by shape
+checking: a write map that misses (or doubles) a block, a backward walk
+that does not exactly reverse the forward one, and a carry scratch that
+is not reset when the grid wraps to the next lane tile (a cross-lane-tile
+carry RACE: tile j+1's first chunk starts from tile j's final sweep
+state).  Pallas clamps out-of-range block indices instead of failing, so
+an off-by-one index map produces wrong *values*, never an error.
+
+This checker proves all three per registered streamed spec, statically:
+
+  * **write coverage** — enumerating every output ``BlockSpec`` index map
+    over the whole grid must hit every block of the output exactly once
+    (a bijection onto the block range);
+  * **read bounds + mirror** — every chunked input stays inside its
+    operand's block range, and within each kernel all N-chunked walks
+    agree on one direction: ascending ``0..num_n-1`` in the forward
+    kernel, the exact reversal ``num_n-1..0`` in the backward kernel;
+  * **carry protocol** — the kernel body is executed OUTSIDE Pallas on
+    mock refs (``jax.lax.fori_loop`` / ``pl.when`` / ``pl.program_id``
+    swapped for host equivalents), twice per probe: once with a
+    zero-filled carry scratch and once with a sentinel-filled one.  At
+    ``k == 0`` the outputs must be identical (stale state is dead — the
+    ``reset_carry`` contract); at ``k > 0`` they must differ (the carry
+    actually threads the sweep across chunks — a kernel that always
+    resets is equally wrong).
+
+The mock execution is the "abstract interpretation of the kernel
+builders" leg of the tentpole: it runs the *generated* bodies — the same
+``functools.partial`` objects ``pl.pallas_call`` would receive — with the
+grid made explicit, so a defect in the generic builders (not just the
+tables) is caught before anything touches a TPU.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import engine
+from repro.kernels.common import block_shape_of, index_map_of
+
+from . import Finding
+from .capture import trace_spec_calls
+
+_SENTINEL = 0.37  # finite, nonzero, far from any legit zero-carry value
+
+
+# ---------------------------------------------------------------------------
+# Index-map enumeration
+# ---------------------------------------------------------------------------
+
+def _block_range(array_shape: tuple, block_shape: tuple) -> tuple:
+    return tuple(a // b for a, b in zip(array_shape, block_shape))
+
+
+def _check_write_coverage(spec, rec, out: list) -> None:
+    pts = rec.grid_points()
+    for idx, (ospec, oshape) in enumerate(zip(rec.out_specs,
+                                              rec.out_shapes)):
+        sub = f"{spec.name}.out[{idx}]"
+        rng = _block_range(tuple(oshape.shape), block_shape_of(ospec))
+        index_map = index_map_of(ospec)
+        seen: dict = {}
+        for pt in pts:
+            blk = tuple(index_map(*pt))
+            if any(not (0 <= b < r) for b, r in zip(blk, rng)):
+                out.append(Finding("gridcheck", sub,
+                                   f"grid point {pt} writes block {blk} "
+                                   f"outside the block range {rng} "
+                                   f"(Pallas clamps — silent corruption)"))
+            elif blk in seen:
+                out.append(Finding("gridcheck", sub,
+                                   f"grid points {seen[blk]} and {pt} both "
+                                   f"write block {blk} — write coverage is "
+                                   f"not a bijection"))
+            else:
+                seen[blk] = pt
+        missing = {b for b in np.ndindex(*rng)} - set(seen)
+        if missing and not any(f.subject == sub for f in out):
+            out.append(Finding("gridcheck", sub,
+                               f"blocks never written: {sorted(missing)}"))
+
+
+def _chunk_walks(rec, arg_shapes, specs) -> list:
+    """(spec_idx, walk) for each N-chunked spec: the sequence of N-chunk
+    indices visited as the fast grid axis k advances at fixed j=0."""
+    walks = []
+    num_n = rec.grid[-1]
+    for idx, (spec_, shape) in enumerate(zip(specs, arg_shapes)):
+        index_map = index_map_of(spec_)
+        bshape = block_shape_of(spec_)
+        if bshape == (1, 1):
+            continue
+        walk = [index_map(0, k) for k in range(num_n)]
+        # which tuple position varies with k = the N-chunk coordinate
+        varying = [d for d in range(len(walk[0]))
+                   if len({w[d] for w in walk}) > 1]
+        if not varying:
+            continue  # constant over k (a resident block) — not a walk
+        walks.append((idx, [w[varying[0]] for w in walk]))
+    return walks
+
+
+def _check_read_bounds(spec, rec, out: list) -> None:
+    pts = rec.grid_points()
+    for idx, (ispec, shape) in enumerate(zip(rec.in_specs, rec.arg_shapes)):
+        sub = f"{spec.name}.in[{idx}]"
+        rng = _block_range(tuple(shape), block_shape_of(ispec))
+        index_map = index_map_of(ispec)
+        bad = sorted({tuple(index_map(*pt)) for pt in pts
+                      if any(not (0 <= b < r)
+                             for b, r in zip(index_map(*pt), rng))})
+        if bad:
+            out.append(Finding("gridcheck", sub,
+                               f"blocks read outside the block range "
+                               f"{rng}: {bad} (Pallas clamps — the kernel "
+                               f"would silently re-read an edge chunk)"))
+
+
+def _check_mirror(spec, records, out: list) -> None:
+    """Forward kernel walks chunks ascending; backward exactly reversed."""
+    num_n = records[0].grid[-1]
+    ascending = list(range(num_n))
+    for rec, direction, want in ((records[0], "forward", ascending),
+                                 (records[1], "backward", ascending[::-1])):
+        specs = tuple(rec.in_specs) + tuple(rec.out_specs)
+        shapes = tuple(rec.arg_shapes) + tuple(
+            tuple(o.shape) for o in rec.out_shapes)
+        walks = _chunk_walks(rec, shapes, specs)
+        if not walks:
+            out.append(Finding("gridcheck", spec.name,
+                               f"{direction} kernel has no N-chunked "
+                               f"operand at all"))
+            continue
+        for idx, walk in walks:
+            if walk != want:
+                out.append(Finding(
+                    "gridcheck", f"{spec.name}.{direction}",
+                    f"operand {idx} walks N-chunks {walk}, expected "
+                    f"{want} — the backward maps must exactly mirror the "
+                    f"forward chunk walk" if direction == "backward" else
+                    f"operand {idx} walks N-chunks {walk}, expected the "
+                    f"ascending walk {want}"))
+
+
+# ---------------------------------------------------------------------------
+# Mock-executing the kernel bodies (carry protocol)
+# ---------------------------------------------------------------------------
+
+class _MockRef:
+    """A numpy-backed stand-in for a Pallas ref, good enough for the
+    engine's access idioms: ``ref[pl.ds(i, 1), :]``, ``ref[r:r+1,
+    pl.ds(i, 1)]``, ``ref[...] = x``, ``jnp.zeros_like(ref)``."""
+
+    def __init__(self, arr):
+        self.arr = np.array(arr, dtype=np.float32)
+
+    @property
+    def shape(self):
+        return self.arr.shape
+
+    @property
+    def dtype(self):
+        return self.arr.dtype
+
+    def __jax_array__(self):
+        return jnp.asarray(self.arr)
+
+    @staticmethod
+    def _one(ix):
+        if hasattr(ix, "start") and hasattr(ix, "size") and \
+                not isinstance(ix, slice):          # pl.ds -> Slice
+            start = int(ix.start)
+            return slice(start, start + int(ix.size))
+        return ix
+
+    def _key(self, key):
+        if key is Ellipsis:
+            return key
+        if isinstance(key, tuple):
+            return tuple(self._one(k) for k in key)
+        return self._one(key)
+
+    def __getitem__(self, key):
+        return jnp.asarray(self.arr[self._key(key)])
+
+    def __setitem__(self, key, val):
+        self.arr[self._key(key)] = np.asarray(val)
+
+
+@contextlib.contextmanager
+def _host_kernel_env(program_ids: list):
+    """Run kernel bodies eagerly on the host: fori_loop becomes a Python
+    loop (so ref indices stay concrete ints), ``pl.when`` executes on the
+    concrete predicate, ``pl.program_id`` reads ``program_ids``."""
+    real_fori = jax.lax.fori_loop
+    real_when = pl.when
+    real_pid = pl.program_id
+
+    def fori(lo, hi, body, init, **_kw):
+        carry = init
+        for t in range(int(lo), int(hi)):
+            carry = body(t, carry)
+        return carry
+
+    def when(cond):
+        def deco(fn):
+            if bool(cond):
+                fn()
+            return fn
+        return deco
+
+    jax.lax.fori_loop = fori
+    pl.when = when
+    pl.program_id = lambda axis: program_ids[axis]
+    try:
+        yield
+    finally:
+        jax.lax.fori_loop = real_fori
+        pl.when = real_when
+        pl.program_id = real_pid
+
+
+def _operand_data(spec, rec, rng) -> list:
+    """Finite, well-conditioned block data per input operand.  For batch
+    layouts the main diagonal must dominate — the fused factorisation
+    divides by it in-kernel."""
+    data = []
+    main = {3: 1, 5: 2}[spec.bandwidth]
+    for idx, ispec in enumerate(rec.in_specs):
+        shape = block_shape_of(ispec)
+        block = rng.uniform(0.2, 0.9, size=shape)
+        if spec.layout == "batch" and idx == main and \
+                idx < spec.bandwidth:
+            block = rng.uniform(2.5, 3.5, size=shape)
+        data.append(block.astype(np.float32))
+    return data
+
+
+def _run_probe(rec, in_data, carry_fill, pid) -> list:
+    """Execute the kernel body once; returns the output/scratch-spill
+    arrays (everything the grid step writes besides the carry)."""
+    ins = [_MockRef(d) for d in in_data]
+    outs = [_MockRef(np.zeros(block_shape_of(s), np.float32))
+            for s in rec.out_specs]
+    scratch = [_MockRef(np.full(tuple(s.shape), carry_fill, np.float32))
+               for s in rec.scratch_shapes]
+    with _host_kernel_env(list(pid)):
+        rec.kernel(*ins, *outs, *scratch)
+    return [o.arr for o in outs]
+
+
+def _check_carry_protocol(spec, records, out: list) -> None:
+    for which, rec in zip(("forward", "backward"), records):
+        if not rec.scratch_shapes:
+            out.append(Finding("gridcheck", f"{spec.name}.{which}",
+                               "streamed kernel has no carry scratch — "
+                               "the sweep state cannot thread N-chunks"))
+            continue
+        rng = np.random.default_rng(3)
+        in_data = _operand_data(spec, rec, rng)
+        sub = f"{spec.name}.{which}"
+        # k == 0 (fresh lane tile): stale carry state must be DEAD
+        base = _run_probe(rec, in_data, 0.0, (1, 0))
+        stale = _run_probe(rec, in_data, _SENTINEL, (1, 0))
+        if any(not np.array_equal(b, s) for b, s in zip(base, stale)):
+            out.append(Finding(
+                "gridcheck", sub,
+                "stale carry scratch leaks into the k == 0 chunk — "
+                "reset_carry missing/broken: lane tile j+1 would start "
+                "from tile j's final sweep state (cross-lane-tile carry "
+                "race)"))
+        # k > 0 (mid-sweep): the carry must actually participate
+        base = _run_probe(rec, in_data, 0.0, (0, 1))
+        threaded = _run_probe(rec, in_data, _SENTINEL, (0, 1))
+        if all(np.array_equal(b, t) for b, t in zip(base, threaded)):
+            out.append(Finding(
+                "gridcheck", sub,
+                "carry scratch is ignored at k > 0 — the sweep state "
+                "does not thread across N-chunks (the kernel resets "
+                "unconditionally or never reads its carry)"))
+
+
+def run() -> list:
+    """All gridcheck invariants over every registered streamed spec (the
+    resident kernels have a trivial 1-D grid, checked for coverage too)."""
+    out: list = []
+    for name in sorted(engine.REGISTRY):
+        spec = engine.REGISTRY[name]
+        records = trace_spec_calls(spec)
+        for rec in records:
+            _check_write_coverage(spec, rec, out)
+            _check_read_bounds(spec, rec, out)
+        if not spec.streamed:
+            continue
+        if len(records) != 2:
+            out.append(Finding("gridcheck", spec.name,
+                               f"streamed spec emitted {len(records)} "
+                               f"pallas_call(s), expected the fwd/bwd "
+                               f"pair"))
+            continue
+        _check_mirror(spec, records, out)
+        _check_carry_protocol(spec, records, out)
+    return out

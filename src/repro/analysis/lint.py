@@ -1,0 +1,98 @@
+"""AST lint: no concretization of potentially-traced values.
+
+``float(x)`` / ``int(x)`` / ``x.item()`` / ``np.asarray(x)`` on a traced
+JAX value raise ``ConcretizationTypeError`` — but only when the enclosing
+function is finally jitted, which for solver code can be several PRs
+after the line lands (PR 3's ``float(f.eps[2])`` shipped green and broke
+``jax.jit(solve)`` later).  This lint flags those calls *statically* in
+the kernel/solver layers, where nearly every value is potentially traced.
+
+Legitimate host-side sites (static shapes, mesh extents, checkpoint
+bookkeeping) carry an explicit allowlist marker on the flagged line::
+
+    n_bytes = int(np.prod(leaf.shape))  # speclint: allow-concretize
+
+The marker is a deliberate audit trail: every concretization in the
+traced layers is either provably host-side (and says so) or a finding.
+Calls whose argument is a literal constant are not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from . import Finding
+
+#: The marker that allowlists one line (put it on the line of the call).
+ALLOW_MARKER = "speclint: allow-concretize"
+
+#: Directories under src/repro whose code runs inside traces.
+TRACED_PACKAGES = ("kernels", "solver")
+
+_CAST_NAMES = ("float", "int")
+_NUMPY_NAMES = ("np", "numpy")
+
+
+def _is_static_arg(node) -> bool:
+    """Literal constants (and unary +/- of them) can never be traced."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.operand,
+                                                    ast.Constant):
+        return True
+    return False
+
+
+def _flag_of(node: ast.Call) -> str | None:
+    fn = node.func
+    if isinstance(fn, ast.Name) and fn.id in _CAST_NAMES:
+        if node.args and not _is_static_arg(node.args[0]):
+            return f"{fn.id}(...)"
+        return None
+    if isinstance(fn, ast.Attribute):
+        if fn.attr == "item" and not node.args:
+            return ".item()"
+        if fn.attr == "asarray" and isinstance(fn.value, ast.Name) and \
+                fn.value.id in _NUMPY_NAMES:
+            return "np.asarray(...)"
+    return None
+
+
+def lint_source(text: str, filename: str = "<string>") -> list:
+    """Lint one source text; returns findings."""
+    out: list = []
+    try:
+        tree = ast.parse(text, filename=filename)
+    except SyntaxError as exc:
+        return [Finding("astlint", f"{filename}:{exc.lineno}",
+                        f"syntax error: {exc.msg}")]
+    lines = text.splitlines()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        flag = _flag_of(node)
+        if flag is None:
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if ALLOW_MARKER in line:
+            continue
+        out.append(Finding(
+            "astlint", f"{filename}:{node.lineno}",
+            f"{flag} concretizes a potentially-traced value (raises "
+            f"ConcretizationTypeError under jit/scan); hoist it to the "
+            f"host side or mark the line with '# {ALLOW_MARKER}'"))
+    return out
+
+
+def run(root: str | None = None) -> list:
+    """Lint every module of the traced packages (kernels + solver)."""
+    if root is None:
+        root = pathlib.Path(__file__).resolve().parents[1]
+    root = pathlib.Path(root)
+    out: list = []
+    for pkg in TRACED_PACKAGES:
+        for path in sorted((root / pkg).rglob("*.py")):
+            rel = path.relative_to(root.parent)
+            out.extend(lint_source(path.read_text(), str(rel)))
+    return out

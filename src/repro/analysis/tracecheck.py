@@ -1,0 +1,136 @@
+"""tracecheck — the jit contract of every registered backend x mode.
+
+A ``Factorization`` crosses ``jit`` / ``vmap`` / ``grad`` / ``lax.scan``
+only if (a) its meta stays hashable and (b) NO code under ``solve`` /
+``transpose_solve`` concretizes a traced leaf.  Both properties are
+invisible to the test suite until someone actually jits the failing
+combination (PR 3's ``float(f.eps[2])`` broke exactly this way).
+
+This checker proves the contract without running a single solve: every
+registered pure backend x storage mode x boundary condition is driven
+through ``jax.eval_shape`` with the factorization's leaves replaced by
+``ShapeDtypeStruct``s — FULLY traced values with no data at all, so any
+``float()`` / ``.item()`` / host round-trip on a leaf raises immediately
+(abstract values poison concretization by construction).  ``SolveMeta``
+hashability is asserted on the way.  The backend list comes from the
+registry (``available_pure_backends``), so a newly registered backend is
+contract-checked automatically.
+
+Combinations a backend *declares* unsupported (``NotImplementedError``
+from ``factorize`` — e.g. pallas on periodic x batch) are recorded as
+skips, not findings: the contract is about what a backend claims to
+serve.
+
+The second half is the AST lint (``repro.analysis.lint``): the same
+defect class caught at the source level across ``repro.kernels`` /
+``repro.solver``, including paths no current meta combination reaches.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from . import Finding
+from . import lint as _lint
+
+#: (n, m) of the contract-check systems — tiny; nothing ever solves.
+CHECK_N, CHECK_M = 32, 16
+
+
+def _case_system(bandwidth: int, mode: str, periodic: bool):
+    """A well-conditioned BandedSystem for one matrix-cell case."""
+    from repro.solver import BandedSystem
+
+    rng = np.random.default_rng(bandwidth)
+    n = CHECK_N
+    if mode == "uniform":
+        if bandwidth == 3:
+            diags = (-1.0, 4.0, -1.0)
+        else:
+            s = 0.11
+            diags = (s, -4 * s, 1 + 6 * s, -4 * s, s)
+        diags = tuple(np.full(n, v, np.float32) for v in diags)
+    else:
+        off = [rng.uniform(-1, 1, n).astype(np.float32)
+               for _ in range(bandwidth - 1)]
+        main = (sum(np.abs(o) for o in off)
+                + np.float32(bandwidth - 1.0)).astype(np.float32)
+        diags = (*off[:bandwidth // 2], main, *off[bandwidth // 2:])
+    ctor = BandedSystem.tridiag if bandwidth == 3 else BandedSystem.penta
+    return ctor(*diags, n=n, periodic=periodic, mode=mode,
+                batch=CHECK_M if mode == "batch" else None)
+
+
+def _abstract(tree):
+    """Replace every traced leaf by a ShapeDtypeStruct (data-free)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jax.ShapeDtypeStruct(np.shape(leaf),
+                                          np.asarray(leaf).dtype), tree)
+
+
+def contract_cases() -> list:
+    """(backend, bandwidth, mode, periodic) for the full support matrix."""
+    from repro.solver.registry import available_pure_backends
+
+    return [(backend, bw, mode, periodic)
+            for backend in available_pure_backends()
+            for bw in (3, 5)
+            for mode in ("constant", "uniform", "batch")
+            for periodic in (False, True)]
+
+
+def check_case(backend: str, bandwidth: int, mode: str,
+               periodic: bool) -> list:
+    """Findings for one backend x mode x bc cell (empty = contract holds,
+    or the backend declared the cell unsupported)."""
+    from repro.solver import factorize, solve, transpose_solve
+
+    sub = (f"{backend}/{'tridiag' if bandwidth == 3 else 'penta'}/"
+           f"{'periodic' if periodic else 'dirichlet'}/{mode}")
+    system = _case_system(bandwidth, mode, periodic)
+    try:
+        fact = factorize(system, backend=backend)
+    except NotImplementedError:
+        return []  # declared unsupported — not a contract violation
+    except Exception as exc:  # noqa: BLE001 — every failure is a finding
+        return [Finding("tracecheck", sub,
+                        f"factorize raised {type(exc).__name__}: {exc}")]
+
+    out: list = []
+    try:
+        hash(fact.meta)
+    except TypeError as exc:
+        out.append(Finding("tracecheck", sub,
+                           f"SolveMeta is unhashable ({exc}) — the "
+                           f"factorization cannot cross jit boundaries"))
+        return out
+
+    abstract_fact = _abstract(fact)
+    rhs = jax.ShapeDtypeStruct((system.n, CHECK_M), np.float32)
+    for name, fn in (("solve", solve),
+                     ("transpose_solve", transpose_solve)):
+        try:
+            got = jax.eval_shape(fn, abstract_fact, rhs)
+        except Exception as exc:  # noqa: BLE001
+            out.append(Finding(
+                "tracecheck", sub,
+                f"{name} breaks under tracing with fully traced "
+                f"Factorization leaves — {type(exc).__name__}: "
+                f"{str(exc).splitlines()[0]}"))
+            continue
+        if tuple(got.shape) != (system.n, CHECK_M):
+            out.append(Finding("tracecheck", sub,
+                               f"{name} traced to shape {got.shape}, "
+                               f"expected {(system.n, CHECK_M)}"))
+    return out
+
+
+def run() -> list:
+    """The full jit-contract matrix + the concretization AST lint."""
+    out: list = []
+    for case in contract_cases():
+        out.extend(check_case(*case))
+    out.extend(_lint.run())
+    return out

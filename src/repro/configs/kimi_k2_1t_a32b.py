@@ -4,7 +4,7 @@ vocab=163840, MoE 384 experts top-8 + shared expert; trillion-param MoE.
 
 Spec-line wins over the real model where they differ (the release uses
 MLA; the assigned line says GQA kv=8 — documented in DESIGN.md §6).
-Optimizer moments are bf16 so params+opt fit 512 x 16 GB (DESIGN.md §8)."""
+Optimizer moments are bf16 so params+opt fit 512 x 16 GB (DESIGN.md §9)."""
 
 from repro.models import ArchConfig
 

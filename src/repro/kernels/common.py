@@ -164,6 +164,20 @@ def chunk_lhs_spec(rows: int, block_n: int, num_n: int, *,
     return pl.BlockSpec((rows, block_n), lambda j, k: (0, k))
 
 
+def block_shape_of(block_spec) -> tuple:
+    """The (static) block shape of a ``pl.BlockSpec`` — a version-stable
+    accessor for the static-analysis layer (``repro.analysis``), which
+    enumerates kernel grids without running them."""
+    return tuple(block_spec.block_shape)
+
+
+def index_map_of(block_spec):
+    """The index-map callable of a ``pl.BlockSpec`` (grid indices ->
+    block indices).  ``repro.analysis.gridcheck`` enumerates this map over
+    the whole grid to prove write coverage and chunk-walk mirroring."""
+    return block_spec.index_map
+
+
 def reset_carry(carry_ref, k) -> None:
     """Zero the carry scratch on the first N-chunk of each lane tile.
 

@@ -198,6 +198,49 @@ class SweepSpec:
             return None, _BATCH_BWD[self.order]
         return _PASS_TABLE[(self.bandwidth, self.uniform, self.transposed)]
 
+    @property
+    def scale_row(self) -> int:
+        """Row index of the stored inverse diagonal in the stacked LHS —
+        the ONLY row a pass's ``scale`` may legally point at (0 for batch
+        layout, where the fused factorisation holds the inverse).
+
+        Uniform stacks drop the eps row, so the inverse sits one row
+        lower on the forward side ([beta, inv_alpha, gamma, delta]) but
+        keeps row 2 on the transposed side ([delta, gamma, inv_alpha,
+        beta] — the dropped row is at the other end of the band)."""
+        if self.layout == "batch":
+            return 0
+        if self.bandwidth == 3:
+            return 1
+        if self.uniform and not self.transposed:
+            return 1
+        return 2
+
+    @property
+    def resident_name(self) -> str:
+        """Name of the VMEM-resident sibling (self when not streamed)."""
+        return dataclasses.replace(self, streamed=False).name
+
+    def twin_name(self) -> str | None:
+        """Name of the transposed twin spec (None for batch layout, whose
+        adjoint reuses the forward kernels on rolled diagonals)."""
+        if self.layout == "batch":
+            return None
+        return dataclasses.replace(self, transposed=not self.transposed).name
+
+    def dummy_args(self, n: int, m: int, dtype=jnp.float32) -> tuple:
+        """``(args, eps)`` zero-filled operands shaped for this spec's
+        solver entry point — the introspection hook ``repro.analysis``
+        uses to drive the kernel builders under abstract interpretation
+        (no solve ever runs on them)."""
+        if self.layout == "shared":
+            args = (jnp.zeros((self.lhs_rows, n), dtype),
+                    jnp.zeros((n, m), dtype))
+            eps = jnp.zeros((1, 1), dtype) if self.uniform else None
+            return args, eps
+        return tuple(jnp.zeros((n, m), dtype)
+                     for _ in range(self.bandwidth + 1)), None
+
     # -- derived accounting (no hand-kept tables) ---------------------------
 
     def traffic_words(self, n: int, m: int) -> int:
@@ -265,7 +308,26 @@ REGISTRY: dict = {s.name: s for s in _all_specs()}
 def find_spec(bandwidth: int, mode: str, *, streamed: bool = False,
               transposed: bool = False) -> SweepSpec:
     """Look up the spec serving (bandwidth, storage mode) — the tridiag
-    ``uniform`` mode shares the constant kernel (no eps vector to drop)."""
+    ``uniform`` mode shares the constant kernel (no eps vector to drop).
+
+    Unknown combinations raise ``ValueError`` naming the valid choices
+    (never a bare ``KeyError`` leaking the internal registry key)."""
+    if bandwidth not in (3, 5):
+        raise ValueError(
+            f"no sweep kernels for bandwidth={bandwidth!r}; the engine "
+            f"serves bandwidth 3 (tridiagonal) and 5 (pentadiagonal)")
+    if mode not in ("constant", "uniform", "batch"):
+        raise ValueError(
+            f"unknown storage mode {mode!r}; valid modes are 'constant' "
+            f"(one shared LHS), 'uniform' (all-equal diagonals) and "
+            f"'batch' (per-system LHS copies)")
+    if mode == "batch" and transposed:
+        raise ValueError(
+            "no transposed batch kernels are registered: the adjoint of a "
+            "batch solve rolls the per-lane diagonals into another batch "
+            "system and reuses the FORWARD batch kernels "
+            "(repro.solver.pallas.transpose_solve_stored) — call with "
+            "transposed=False on the rolled diagonals")
     if bandwidth == 3 and mode == "uniform":
         mode = "constant"
     base = "thomas" if bandwidth == 3 else "penta"
@@ -274,7 +336,29 @@ def find_spec(bandwidth: int, mode: str, *, streamed: bool = False,
         name += "_streamed"
     if transposed:
         name += "_t"
-    return REGISTRY[name]
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"no registered sweep kernel named {name!r} for "
+            f"bandwidth={bandwidth}, mode={mode!r}, streamed={streamed}, "
+            f"transposed={transposed}; registered variants: "
+            f"{sorted(REGISTRY)}") from None
+
+
+def pass_table() -> dict:
+    """A copy of the shared-layout pass tables, keyed by
+    ``(bandwidth, uniform, transposed)`` — the introspection hook
+    ``repro.analysis.speccheck`` audits (a copy: mutating it cannot
+    corrupt the engine)."""
+    return dict(_PASS_TABLE)
+
+
+def batch_backward_table() -> dict:
+    """A copy of the batch-layout back-substitution table, keyed by carry
+    order — the fused forward factorisation has no PassSpec (its
+    coefficient algebra lives in ``_factor_pass``)."""
+    return dict(_BATCH_BWD)
 
 
 def traffic_table(bandwidth: int, n: int, m: int, dtype=jnp.float32) -> dict:

@@ -259,10 +259,33 @@ def fused_cn_penta_step(pf: PeriodicPentaFactor, sigma: float, c: jax.Array,
 # batch-streamed, ...) automatically has a roofline entry.
 # ---------------------------------------------------------------------------
 
+#: Dispatch entry point per (bandwidth, layout) — the introspection hook
+#: behind ``repro.analysis``'s registry-driven sweeps: every REGISTRY spec
+#: resolves to exactly one of these public callables, so an analysis (or a
+#: sanitizer sweep) can exercise a NEW spec without a hand-kept case list.
+ENTRY_POINTS = {
+    (3, "shared"): thomas_constant,
+    (3, "batch"): thomas_batch,
+    (5, "shared"): penta_constant,
+    (5, "batch"): penta_batch,
+}
+
+
+def entry_point(spec: SweepSpec):
+    """The ops-layer callable that dispatches ``spec`` (see the per-entry
+    docstrings for the keyword contract: shared specs take a factor +
+    ``transposed``/``uniform`` flags, batch specs take raw diagonals)."""
+    return ENTRY_POINTS[(spec.bandwidth, spec.layout)]
+
+
 def solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int, m: int, *,
                              dtype=jnp.float32, streamed: bool = False,
                              transposed: bool = False) -> int:
-    """Bytes moved HBM<->VMEM by one batched solve of an (n, m) RHS."""
+    """Bytes moved HBM<->VMEM by one batched solve of an (n, m) RHS.
+
+    Unknown (bandwidth, mode, streamed, transposed) combinations raise an
+    informative ``ValueError`` (via ``find_spec``) naming the valid
+    choices."""
     if mode == "batch" and transposed:
         # the adjoint of a batch solve rolls the per-lane diagonals and
         # runs the FORWARD batch kernels — identical streams.

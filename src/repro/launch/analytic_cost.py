@@ -20,9 +20,7 @@ These are steady-state lower bounds (fusion-friendly); documented per term.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
-import numpy as np
 
 BF16 = 2
 F32 = 4

@@ -3,14 +3,13 @@ GQA/MQA/cross attention with KV caches, SwiGLU MLP.
 
 All attention math accumulates in fp32 regardless of activation dtype. The
 blockwise attention is the pure-JAX flash oracle used everywhere (the dry-run
-cannot lower Pallas on CPU; see DESIGN.md §9): double lax.scan/map chunking
+cannot lower Pallas on CPU; see DESIGN.md §10): double lax.scan/map chunking
 keeps both the HLO and the live-buffer footprint small at 32k sequence
 lengths.
 """
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ HLO size are O(1) in depth) with optional ``jax.checkpoint`` remat.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -33,7 +32,6 @@ from .layers import (
     rmsnorm,
     rope,
 )
-from .moe import moe_apply
 from .params import ParamSpec, abstract_params, init_params
 from .rglru import rglru_apply, rglru_decode_step, rglru_specs
 from .ssm import ssm_apply, ssm_decode_step, ssm_specs

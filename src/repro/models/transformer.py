@@ -3,7 +3,6 @@ attention-bearing family, in train, prefill and decode flavours."""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.sharding import ShardingCtx

@@ -40,7 +40,8 @@ from .system import BandedSystem
 
 
 def _nbytes(tree: Any) -> int:
-    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+    # host-side: leaf shapes/itemsizes are static metadata, never traced
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize  # speclint: allow-concretize
                    for l in jax.tree_util.tree_leaves(tree)))
 
 

@@ -73,6 +73,13 @@ def get_pure_backend(name: str) -> PureBackend:
         ) from None
 
 
+def available_pure_backends() -> list:
+    """Sorted names of every pure-registered backend — what ``factorize``
+    accepts, and what ``repro.analysis.tracecheck`` enumerates so a newly
+    registered backend is jit-contract-checked automatically."""
+    return sorted(_PURE_REGISTRY)
+
+
 def register_backend(name: str):
     """Class decorator: register a solver backend under ``name``."""
 

@@ -37,7 +37,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -67,7 +66,8 @@ def resolve_mesh(mesh: Mesh | None, batch_axis):
     elif batch_axis is None:
         batch_axis = mesh.axis_names[-1]
     axes = batch_axis if isinstance(batch_axis, tuple) else (batch_axis,)
-    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    # host-side: mesh axis sizes are static Python ints, never traced
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))  # speclint: allow-concretize
     return mesh, batch_axis, n_shards
 
 

@@ -8,15 +8,11 @@ ShapeDtypeStructs). Gradient accumulation over microbatches is a
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import Model
-from repro.models.params import ParamSpec
 from repro.sharding import ShardingCtx
 from .optimizer import AdamW, apply_updates
 

@@ -4,7 +4,6 @@ import random
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 try:

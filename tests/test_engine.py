@@ -212,3 +212,27 @@ def test_vmem_counts_are_spec_derived():
     # transposed shares the forward's working set
     assert REGISTRY["thomas_constant_t"].vmem_counts() \
         == REGISTRY["thomas_constant"].vmem_counts()
+
+
+def test_find_spec_errors_name_valid_choices():
+    """Unknown combos raise informative ValueErrors, never bare KeyErrors
+    leaking the internal registry key."""
+    with pytest.raises(ValueError, match="bandwidth 3 .* and 5"):
+        find_spec(7, "constant")
+    with pytest.raises(ValueError, match="'constant'.*'uniform'.*'batch'"):
+        find_spec(3, "dense")
+    with pytest.raises(ValueError, match="rolls the per-lane diagonals"):
+        find_spec(3, "batch", transposed=True)
+    # tridiag uniform aliases to the constant kernel (no eps row to drop)
+    assert find_spec(3, "uniform").name == "thomas_constant"
+
+
+def test_traffic_bytes_errors_are_informative():
+    with pytest.raises(ValueError, match="bandwidth"):
+        kops.solver_hbm_traffic_bytes(4, "constant", 64, 64)
+    with pytest.raises(ValueError, match="storage mode"):
+        kops.solver_hbm_traffic_bytes(3, "woops", 64, 64)
+    # the batch adjoint reuses the forward batch kernels - same streams
+    assert kops.solver_hbm_traffic_bytes(3, "batch", 64, 64,
+                                         transposed=True) \
+        == kops.solver_hbm_traffic_bytes(3, "batch", 64, 64)

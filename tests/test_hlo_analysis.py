@@ -1,13 +1,12 @@
 """The HLO collective-bytes parser: trip-count correction on real compiled
 modules (the §Roofline methodology's measured leg)."""
 
-import re
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.launch.hlo_analysis import HloModule, collective_bytes, roofline_terms
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
 
 
 def test_trip_count_scales_loop_collectives():

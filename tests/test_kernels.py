@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.core import (

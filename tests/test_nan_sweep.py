@@ -1,0 +1,42 @@
+"""Registry-driven sanitizer sweep (``repro.analysis.nansweep``).
+
+One parametrized case per registered spec so a dead-lane NaN regression
+names its variant directly; CI's nan-guard job additionally runs the same
+sweep via ``python -m repro.analysis --nan-sweep`` under
+``JAX_DEBUG_NANS=1``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.analysis import nansweep
+from repro.kernels.engine import REGISTRY
+
+
+@pytest.fixture(autouse=True)
+def _debug_nans():
+    was = jax.config.jax_debug_nans
+    jax.config.update("jax_debug_nans", True)
+    yield
+    jax.config.update("jax_debug_nans", was)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+@pytest.mark.parametrize("case", [c[0] for c in nansweep.CASES])
+def test_spec_finite(name, case):
+    spec = REGISTRY[name]
+    case_name, n, m, block_m, block_n = next(
+        c for c in nansweep.CASES if c[0] == case)
+    rng = np.random.default_rng(7)
+    x = nansweep._dispatch(spec, rng, n, m, block_m, block_n)
+    vals = np.asarray(x)
+    assert vals.shape == (n, m)
+    assert np.isfinite(vals).all(), (
+        f"{int((~np.isfinite(vals)).sum())} non-finite values in "
+        f"{name}[{case_name}]")
+
+
+def test_sweep_runs_clean():
+    assert nansweep.run() == []

@@ -11,7 +11,6 @@ import textwrap
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.runtime import (

@@ -1,0 +1,21 @@
+"""Developer entry point for the static verification layer.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis`` but runnable
+from a bare checkout without setting ``PYTHONPATH`` — the same
+convenience contract as ``tools/check_readme.py``.  All flags pass
+through (``--self-test``, ``--nan-sweep``, ``--all``, ``-q``).
+
+    python tools/speclint.py --all
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+if __name__ == "__main__":
+    from repro.analysis.__main__ import main
+
+    sys.exit(main())
