@@ -15,10 +15,13 @@ constant-vs-batch × reference-vs-pallas is one sweep (``backends`` table).
 
 ``--json`` additionally writes ``BENCH_solvers.json`` — a list of
 ``{name, us_per_call, backend, n, m}`` rows (the ``backends`` sweep, penta
-``batch``-mode rows included, plus the ``grad_solve`` rows timing the
-custom_vjp adjoint) — so the perf trajectory is machine-readable across
-PRs.  CI runs ``--json`` in interpret mode on every push so the perf
-plumbing cannot silently rot.
+``batch``-mode rows included, the ``grad_solve`` rows timing the
+custom_vjp adjoint, and the ``recurrence`` rows timing the sequence-model
+substrate) — so the perf trajectory is machine-readable across PRs.  CI
+runs ``--json`` in interpret mode on every push, then diffs the rows
+against the committed baseline with ``tools/bench_regress.py``, so the
+perf plumbing cannot silently rot and a matched row cannot silently get
+1.5x slower.
 """
 
 from __future__ import annotations
@@ -383,6 +386,47 @@ def bench_grad_solve_streamed():
 
 
 # ---------------------------------------------------------------------------
+# Gated linear recurrences: XLA scan vs the engine's Pallas kernels
+# ---------------------------------------------------------------------------
+
+def bench_recurrence():
+    """The sequence-model substrate (``repro.core.recurrence``): first- and
+    second-order gated recurrences, XLA scan vs the sweep engine's Pallas
+    recurrence kernels (interpret mode off-TPU — compare trends, not
+    absolutes), plus a forced streamed row.  The auto policy is asserted
+    so the models' kernel path cannot silently degrade back to scan."""
+    from repro.core.recurrence import (_resolve, linear_recurrence,
+                                       linear_recurrence2)
+    from repro.kernels import recurrence_hbm_traffic_bytes
+    assert _resolve("auto", jnp.float32) == "pallas", "auto policy regressed"
+    n, m = 1024, 512
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.uniform(-0.9, 0.9, (n, m)).astype(np.float32))
+    s = jnp.asarray(rng.uniform(-0.6, 0.6, (n, m)).astype(np.float32))
+    t2 = jnp.asarray(rng.uniform(-0.3, 0.3, (n, m)).astype(np.float32))
+    q = _rhs(n, m)
+    for method in ("scan", "pallas"):
+        t = _timeit(jax.jit(
+            lambda d: linear_recurrence(p, d, method=method)), q, reps=2)
+        hbm = recurrence_hbm_traffic_bytes(1, n, m)
+        _record(f"recurrence_order1_{method}_N{n}_M{m}", t, backend=method,
+                n=n, m=m, derived=f"hbm_bytes={hbm}")
+        t = _timeit(jax.jit(
+            lambda d: linear_recurrence2(s, t2, d, method=method)), q, reps=2)
+        hbm = recurrence_hbm_traffic_bytes(2, n, m)
+        _record(f"recurrence_order2_{method}_N{n}_M{m}", t, backend=method,
+                n=n, m=m, derived=f"hbm_bytes={hbm}")
+    # forced streamed kernel: same arithmetic, chunked sweep residency
+    t = _timeit(jax.jit(
+        lambda d: linear_recurrence(p, d, method="pallas", block_n=256)),
+        q, reps=2)
+    hbm = recurrence_hbm_traffic_bytes(1, n, m, streamed=True)
+    _record(f"recurrence_order1_pallas_streamed_N{n}_M{m}", t,
+            backend="pallas", n=n, m=m,
+            derived=f"block_n=256_hbm_bytes={hbm}")
+
+
+# ---------------------------------------------------------------------------
 # Dry-run roofline summary (reads artifacts if present)
 # ---------------------------------------------------------------------------
 
@@ -418,6 +462,7 @@ TABLES = {
     # duplicate rows.
     "backends": bench_backends,
     "grad": bench_grad_solve,
+    "recurrence": bench_recurrence,
     "memory": bench_memory_table,
     "traffic": bench_kernel_traffic,
     "pallas": bench_pallas_kernels,
@@ -431,7 +476,8 @@ def main() -> None:
     which = [a for a in argv if not a.startswith("--")]
     if not which:
         # --json alone: the solver tables that carry (backend, n, m) rows.
-        which = ["backends", "grad"] if write_json else list(TABLES)
+        which = (["backends", "grad", "recurrence"] if write_json
+                 else list(TABLES))
     print("name,us_per_call,derived")
     for k in which:
         TABLES[k]()

@@ -45,7 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.common import block_shape_of, index_map_of
-from repro.kernels.engine import SweepSpec, batch_solver, shared_solver
+from repro.kernels.engine import (SweepSpec, batch_solver, recurrence_solver,
+                                  shared_solver)
 
 #: Reference shapes the checkers trace at — small enough to enumerate the
 #: grid exhaustively, ragged-free (the builders require padded operands),
@@ -116,20 +117,22 @@ def capture_pallas_calls():
         pl.pallas_call = real
 
 
-def trace_spec_calls(spec: SweepSpec, *, n: int = TRACE_N, m: int = TRACE_M,
+def trace_spec_calls(spec, *, n: int = TRACE_N, m: int = TRACE_M,
                      block_m: int = TRACE_BLOCK_M,
                      block_n: int = TRACE_BLOCK_N) -> list:
     """Drive ``spec``'s builder on dummy operands, returning the captured
-    ``CallRecord`` list (one record per ``pallas_call``: one for resident
-    variants, the forward/backward pair for streamed ones)."""
+    ``CallRecord`` list — ``spec.num_pallas_calls`` records: one for
+    resident variants and for every recurrence (single-pass), the
+    forward/backward pair for streamed sweeps."""
     assert m % block_m == 0 and n % block_n == 0
     args, eps = spec.dummy_args(n, m)
     kwargs = dict(block_m=block_m, interpret=True)
     if spec.streamed:
         kwargs["block_n"] = block_n
-    if spec.uniform:
+    if getattr(spec, "uniform", False):
         kwargs["eps"] = eps
-    builder = shared_solver if spec.layout == "shared" else batch_solver
+    builder = {"shared": shared_solver, "batch": batch_solver,
+               "recurrence": recurrence_solver}[spec.layout]
     # .__wrapped__ bypasses jax.jit: the builder body re-executes on every
     # call, so the capture sees the pallas_calls even for cached specs.
     with capture_pallas_calls() as records:

@@ -126,30 +126,44 @@ def _check_read_bounds(spec, rec, out: list) -> None:
                                f"would silently re-read an edge chunk)"))
 
 
+def _check_walk(spec, rec, direction: str, want: list, out: list) -> None:
+    """Every N-chunked operand of one kernel walks chunks in ``want``."""
+    specs = tuple(rec.in_specs) + tuple(rec.out_specs)
+    shapes = tuple(rec.arg_shapes) + tuple(
+        tuple(o.shape) for o in rec.out_shapes)
+    walks = _chunk_walks(rec, shapes, specs)
+    if not walks:
+        out.append(Finding("gridcheck", spec.name,
+                           f"{direction} kernel has no N-chunked "
+                           f"operand at all"))
+        return
+    for idx, walk in walks:
+        if walk != want:
+            out.append(Finding(
+                "gridcheck", f"{spec.name}.{direction}",
+                f"operand {idx} walks N-chunks {walk}, expected "
+                f"{want} — the backward maps must exactly mirror the "
+                f"forward chunk walk" if direction == "backward" else
+                f"operand {idx} walks N-chunks {walk}, expected the "
+                f"{direction} walk {want}"))
+
+
 def _check_mirror(spec, records, out: list) -> None:
     """Forward kernel walks chunks ascending; backward exactly reversed."""
     num_n = records[0].grid[-1]
     ascending = list(range(num_n))
-    for rec, direction, want in ((records[0], "forward", ascending),
-                                 (records[1], "backward", ascending[::-1])):
-        specs = tuple(rec.in_specs) + tuple(rec.out_specs)
-        shapes = tuple(rec.arg_shapes) + tuple(
-            tuple(o.shape) for o in rec.out_shapes)
-        walks = _chunk_walks(rec, shapes, specs)
-        if not walks:
-            out.append(Finding("gridcheck", spec.name,
-                               f"{direction} kernel has no N-chunked "
-                               f"operand at all"))
-            continue
-        for idx, walk in walks:
-            if walk != want:
-                out.append(Finding(
-                    "gridcheck", f"{spec.name}.{direction}",
-                    f"operand {idx} walks N-chunks {walk}, expected "
-                    f"{want} — the backward maps must exactly mirror the "
-                    f"forward chunk walk" if direction == "backward" else
-                    f"operand {idx} walks N-chunks {walk}, expected the "
-                    f"ascending walk {want}"))
+    _check_walk(spec, records[0], "forward", ascending, out)
+    _check_walk(spec, records[1], "backward", ascending[::-1], out)
+
+
+def _check_recurrence_walk(spec, rec, out: list) -> None:
+    """The single recurrence kernel walks chunks ascending, or exactly
+    reversed for the reverse variants — all operands agreeing."""
+    num_n = rec.grid[-1]
+    ascending = list(range(num_n))
+    want = ascending[::-1] if spec.reverse else ascending
+    direction = "descending" if spec.reverse else "ascending"
+    _check_walk(spec, rec, direction, want, out)
 
 
 # ---------------------------------------------------------------------------
@@ -233,14 +247,14 @@ def _host_kernel_env(program_ids: list):
 def _operand_data(spec, rec, rng) -> list:
     """Finite, well-conditioned block data per input operand.  For batch
     layouts the main diagonal must dominate — the fused factorisation
-    divides by it in-kernel."""
+    divides by it in-kernel.  (Recurrence gates at 0.2–0.9 are stable
+    contractions; nothing divides.)"""
     data = []
-    main = {3: 1, 5: 2}[spec.bandwidth]
+    main = {3: 1, 5: 2}[spec.bandwidth] if spec.layout == "batch" else None
     for idx, ispec in enumerate(rec.in_specs):
         shape = block_shape_of(ispec)
         block = rng.uniform(0.2, 0.9, size=shape)
-        if spec.layout == "batch" and idx == main and \
-                idx < spec.bandwidth:
+        if main is not None and idx == main and idx < spec.bandwidth:
             block = rng.uniform(2.5, 3.5, size=shape)
         data.append(block.astype(np.float32))
     return data
@@ -260,7 +274,9 @@ def _run_probe(rec, in_data, carry_fill, pid) -> list:
 
 
 def _check_carry_protocol(spec, records, out: list) -> None:
-    for which, rec in zip(("forward", "backward"), records):
+    labels = (("recurrence",) if len(records) == 1
+              else ("forward", "backward"))
+    for which, rec in zip(labels, records):
         if not rec.scratch_shapes:
             out.append(Finding("gridcheck", f"{spec.name}.{which}",
                                "streamed kernel has no carry scratch — "
@@ -302,12 +318,15 @@ def run() -> list:
             _check_read_bounds(spec, rec, out)
         if not spec.streamed:
             continue
-        if len(records) != 2:
+        if len(records) != spec.num_pallas_calls:
             out.append(Finding("gridcheck", spec.name,
                                f"streamed spec emitted {len(records)} "
-                               f"pallas_call(s), expected the fwd/bwd "
-                               f"pair"))
+                               f"pallas_call(s), expected "
+                               f"{spec.num_pallas_calls}"))
             continue
-        _check_mirror(spec, records, out)
+        if isinstance(spec, engine.RecurrenceSpec):
+            _check_recurrence_walk(spec, records[0], out)
+        else:
+            _check_mirror(spec, records, out)
         _check_carry_protocol(spec, records, out)
     return out

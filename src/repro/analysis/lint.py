@@ -27,8 +27,11 @@ from . import Finding
 #: The marker that allowlists one line (put it on the line of the call).
 ALLOW_MARKER = "speclint: allow-concretize"
 
-#: Directories under src/repro whose code runs inside traces.
-TRACED_PACKAGES = ("kernels", "solver")
+#: Directories under src/repro whose code runs inside traces.  models and
+#: core joined when the sequence models moved onto the Pallas recurrence
+#: engine: their forward passes now sit inside jit/scan the same way the
+#: solver layers do.
+TRACED_PACKAGES = ("kernels", "solver", "models", "core")
 
 _CAST_NAMES = ("float", "int")
 _NUMPY_NAMES = ("np", "numpy")
@@ -86,7 +89,7 @@ def lint_source(text: str, filename: str = "<string>") -> list:
 
 
 def run(root: str | None = None) -> list:
-    """Lint every module of the traced packages (kernels + solver)."""
+    """Lint every module of the traced packages."""
     if root is None:
         root = pathlib.Path(__file__).resolve().parents[1]
     root = pathlib.Path(root)

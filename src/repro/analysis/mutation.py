@@ -31,6 +31,11 @@ of the CUDA solvers the paper benchmarks):
   5. **stale traffic constant** — ``traffic_words`` drifting from what
      the builders actually stream; ``speccheck``'s independent recount
      flags the exact word delta.
+  6. **swapped gate lags** — the order-2 recurrence pass wiring the
+     lag-1 carry to the second-gate operand and vice versa; parity tests
+     at order 1 never see it and symmetric test data can mask it.
+     ``speccheck``'s structural check on the gate-operand pass table
+     flags the miswired lag.
 """
 
 from __future__ import annotations
@@ -113,6 +118,16 @@ def _baked_float_eps():
 
 
 @contextlib.contextmanager
+def _swapped_gate_lags():
+    orig = engine._RECUR_TABLE[2]
+    engine._RECUR_TABLE[2] = engine.PassSpec(((1, 1), (0, 2)), None)
+    try:
+        yield
+    finally:
+        engine._RECUR_TABLE[2] = orig
+
+
+@contextlib.contextmanager
 def _stale_traffic_constant():
     orig = engine.SweepSpec.traffic_words
 
@@ -177,6 +192,8 @@ _MUTATIONS = (
      _float_eps_probe, ""),
     ("stale-traffic-constant", _stale_traffic_constant,
      speccheck.run, "HBM traffic drift"),
+    ("swapped-gate-lags", _swapped_gate_lags,
+     speccheck.run, "gate operand"),
 )
 
 

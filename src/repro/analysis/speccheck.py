@@ -38,7 +38,7 @@ from __future__ import annotations
 
 from repro.kernels import engine
 from repro.kernels.common import shard_lanes
-from repro.kernels.engine import EPS_PARAM, SweepSpec
+from repro.kernels.engine import EPS_PARAM, RecurrenceSpec, SweepSpec
 
 from . import Finding
 from .capture import (TRACE_M, TRACE_N, recount_traffic_words,
@@ -128,6 +128,63 @@ def _check_structure(spec: SweepSpec, out: list) -> None:
                            "non-uniform spec reads the EPS parameter"))
 
 
+def _check_recurrence_structure(spec: RecurrenceSpec, out: list) -> None:
+    """The gate-operand contract: a recurrence is ONE unscaled pass whose
+    multiplicative coefficients are per-token gate operands, wired so the
+    lag-k carry reads gate operand k-1 (the operand order the dispatcher
+    ``ops.recurrence`` passes) with lags ascending — the subtraction
+    order of the generated body, part of the resident==streamed
+    bit-exactness contract."""
+    passes = spec.passes()
+    if len(passes) != 1:
+        out.append(Finding("speccheck", spec.name,
+                           f"recurrence spec runs {len(passes)} passes — a "
+                           f"gated recurrence has no back-substitution "
+                           f"partner, it must be a single pass"))
+        return
+    (pspec,) = passes
+    sub = f"{spec.name}.pass"
+    if pspec.scale is not None:
+        out.append(Finding("speccheck", sub,
+                           f"recurrence pass is scaled by {pspec.scale!r} — "
+                           f"gated recurrences have no stored inverse "
+                           f"diagonal"))
+    lags = _lags(pspec)
+    if lags != tuple(range(1, spec.order + 1)):
+        out.append(Finding("speccheck", sub,
+                           f"pass lags {lags} are not the ascending carry "
+                           f"range 1..{spec.order} (gate-operand order is "
+                           f"part of the bit-exactness contract)"))
+    for src, lag in pspec.terms:
+        if src == EPS_PARAM:
+            out.append(Finding("speccheck", sub,
+                               "recurrence pass reads the EPS parameter "
+                               "(a uniform-penta concept)"))
+        elif src != lag - 1:
+            out.append(Finding("speccheck", sub,
+                               f"lag-{lag} carry reads gate operand {src!r}, "
+                               f"expected operand {lag - 1} — the gate "
+                               f"operands are wired to the wrong lags"))
+
+
+def _check_recurrence_twin(spec: RecurrenceSpec, out: list) -> None:
+    """The reversed twin is the same machine walked the other way: same
+    pass table, only the walk direction differs."""
+    if spec.reverse:
+        return
+    twin = engine.REGISTRY.get(spec.twin_name())
+    if twin is None:
+        out.append(Finding("speccheck", spec.name,
+                           f"reversed twin {spec.twin_name()!r} is not "
+                           f"registered"))
+        return
+    if spec.passes() != twin.passes():
+        out.append(Finding("speccheck", spec.name,
+                           f"reversed twin {twin.name} runs a different "
+                           f"pass table — reversal only mirrors the walk, "
+                           f"it never re-wires the gate terms"))
+
+
 def _check_twin(spec: SweepSpec, out: list) -> None:
     """Transposed twin = the same machine with the scale moved."""
     if spec.layout == "batch" or spec.transposed:
@@ -161,7 +218,7 @@ def _check_twin(spec: SweepSpec, out: list) -> None:
                            f"and {twin_name}"))
 
 
-def _check_streamed_sibling(spec: SweepSpec, out: list) -> None:
+def _check_streamed_sibling(spec, out: list) -> None:
     if not spec.streamed:
         return
     resident = engine.REGISTRY.get(spec.resident_name)
@@ -177,10 +234,10 @@ def _check_streamed_sibling(spec: SweepSpec, out: list) -> None:
                            "move carries, never arithmetic)"))
 
 
-def _check_accounting(spec: SweepSpec, out: list) -> None:
+def _check_accounting(spec, out: list) -> None:
     """Recount traffic + VMEM from the captured builders; exact match."""
     records = trace_spec_calls(spec)
-    want_calls = 2 if spec.streamed else 1
+    want_calls = spec.num_pallas_calls
     if len(records) != want_calls:
         out.append(Finding("speccheck", spec.name,
                            f"builder emitted {len(records)} pallas_call(s), "
@@ -210,7 +267,7 @@ def _check_accounting(spec: SweepSpec, out: list) -> None:
             f"matches the code"))
 
 
-def _check_sharded_traffic(spec: SweepSpec, out: list) -> None:
+def _check_sharded_traffic(spec, out: list) -> None:
     """The per-device model is the single-device model at the local lane
     count — guard the two code paths against diverging."""
     for n_shards in (1, 3):
@@ -233,8 +290,12 @@ def run() -> list:
             out.append(Finding("speccheck", name,
                                f"registry key disagrees with spec.name "
                                f"({spec.name!r})"))
-        _check_structure(spec, out)
-        _check_twin(spec, out)
+        if isinstance(spec, RecurrenceSpec):
+            _check_recurrence_structure(spec, out)
+            _check_recurrence_twin(spec, out)
+        else:
+            _check_structure(spec, out)
+            _check_twin(spec, out)
         _check_streamed_sibling(spec, out)
         _check_accounting(spec, out)
         _check_sharded_traffic(spec, out)

@@ -127,10 +127,59 @@ def check_case(backend: str, bandwidth: int, mode: str,
     return out
 
 
+def recurrence_cases() -> list:
+    """(order, reverse, with_h0) for the gated-recurrence Pallas front
+    end — every registered walk direction, seeded and zero-carry."""
+    return [(order, reverse, with_h0)
+            for order in (1, 2)
+            for reverse in (False, True)
+            for with_h0 in (False, True)]
+
+
+def check_recurrence_case(order: int, reverse: bool, with_h0: bool) -> list:
+    """The ``method="pallas"`` dispatch of ``core.recurrence`` must trace
+    with fully abstract operands (gates, additive operand, h0 seeds) —
+    any concretization in the dispatcher's block tuning, h0 folding or
+    custom_vjp plumbing raises here, without a solve ever running."""
+    from repro.core.recurrence import linear_recurrence, linear_recurrence2
+
+    sub = (f"pallas/recur{order}/"
+           f"{'reverse' if reverse else 'forward'}/"
+           f"{'seeded' if with_h0 else 'zero-carry'}")
+    op = jax.ShapeDtypeStruct((CHECK_N, CHECK_M), np.float32)
+    seed = jax.ShapeDtypeStruct((CHECK_M,), np.float32)
+    if order == 1:
+        def fn(p, q, *h):
+            return linear_recurrence(p, q, *h, reverse=reverse,
+                                     method="pallas", interpret=True)
+        args = (op, op, seed) if with_h0 else (op, op)
+    else:
+        def fn(s, t, u, *h):
+            h0 = (h[0], h[1]) if h else None
+            return linear_recurrence2(s, t, u, h0, reverse=reverse,
+                                      method="pallas", interpret=True)
+        args = (op, op, op, seed, seed) if with_h0 else (op, op, op)
+    try:
+        got = jax.eval_shape(fn, *args)
+    except Exception as exc:  # noqa: BLE001
+        return [Finding(
+            "tracecheck", sub,
+            f"pallas recurrence breaks under tracing with abstract "
+            f"operands — {type(exc).__name__}: "
+            f"{str(exc).splitlines()[0]}")]
+    if tuple(got.shape) != (CHECK_N, CHECK_M):
+        return [Finding("tracecheck", sub,
+                        f"traced to shape {got.shape}, expected "
+                        f"{(CHECK_N, CHECK_M)}")]
+    return []
+
+
 def run() -> list:
     """The full jit-contract matrix + the concretization AST lint."""
     out: list = []
     for case in contract_cases():
         out.extend(check_case(*case))
+    for rcase in recurrence_cases():
+        out.extend(check_recurrence_case(*rcase))
     out.extend(_lint.run())
     return out

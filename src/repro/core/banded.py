@@ -41,7 +41,8 @@ _DEPRECATION = ("%s is deprecated; use repro.solver.plan(BandedSystem.%s(...))"
 
 
 def _nbytes(tree: Any) -> int:
-    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+    return int(sum(  # speclint: allow-concretize — static shape math
+        np.prod(l.shape) * l.dtype.itemsize
                    for l in jax.tree_util.tree_leaves(tree)))
 
 

@@ -120,6 +120,23 @@ _BATCH_BWD = {
     2: PassSpec(((0, 1), (1, 2)), None),
 }
 
+# Gated-recurrence passes, by carry order.  A gated linear recurrence
+#   h_i = p_i h_{i-1} + q_i          (order 1)
+#   h_i = s_i h_{i-1} + t_i h_{i-2} + u_i   (order 2)
+# is a banded sweep pass whose multiplicative coefficients are per-token
+# GATE OPERANDS — full (N, M) arrays riding the lane axis like the batch
+# layout's fused coefficients — instead of rows of a shared stacked LHS.
+# Term convention: gate operand index == carry lag - 1 (the lag-1 gate is
+# operand 0, the lag-2 gate operand 1), lags ascending, no scale (gated
+# recurrences have no stored inverse diagonal).  The sign flip between
+# the sweep's ``acc - coeff*carry`` and the recurrence's ``+`` lives in
+# the gate accessor (``_gate_coeff``), which negates on read — IEEE
+# negation is exact, so ``q - (-p)*h`` is bitwise ``q + p*h``.
+_RECUR_TABLE = {
+    1: PassSpec(((0, 1),), None),
+    2: PassSpec(((0, 1), (1, 2)), None),
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
@@ -284,6 +301,118 @@ class SweepSpec:
         blocks = self.bandwidth + 1 + 1 + self.n_coefs
         return blocks, 0, self.carry_rows
 
+    @property
+    def num_pallas_calls(self) -> int:
+        """``pl.pallas_call`` count one solve of this spec emits — the
+        accounting invariant the capture layer cross-checks.  Streamed
+        sweeps are a forward/backward kernel PAIR; resident sweeps fuse
+        both passes into one kernel."""
+        return 2 if self.streamed else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrenceSpec:
+    """Declarative description of one gated-linear-recurrence variant.
+
+    The sweep machine's second spec family (DESIGN.md §4): same generic
+    pass body (``_solve_pass``), same streamed split-N grid plumbing, same
+    registry/accounting/speclint contracts as ``SweepSpec`` — but the
+    multiplicative coefficients arrive as per-token (N, M) gate operands
+    (one per carry lag) instead of a shared stacked LHS, and a solve is a
+    SINGLE pass (a recurrence has no back-substitution partner).
+
+    ``reverse`` runs the recurrence from i = N-1 down to 0
+    (h_i = p_i h_{i+1} + q_i) — the suffix-scan shape, NOT an adjoint of
+    the forward variant (the adjoint additionally shifts the gates, which
+    the dispatcher ``core.recurrence`` does on the host).
+    """
+
+    order: int                # 1 | 2 carry lags
+    reverse: bool = False     # walk the sweep axis descending
+    streamed: bool = False    # HBM-streamed split-N vs VMEM-resident
+
+    def __post_init__(self):
+        if self.order not in (1, 2):
+            raise ValueError(f"recurrence order must be 1 or 2, "
+                             f"got {self.order}")
+
+    # -- derived structure --------------------------------------------------
+
+    @property
+    def layout(self) -> str:
+        return "recurrence"
+
+    @property
+    def lhs_rows(self) -> int:
+        return 0              # no shared stacked LHS — gates are operands
+
+    @property
+    def carry_rows(self) -> int:
+        return self.order
+
+    @property
+    def mode(self) -> str:
+        return "recurrence"
+
+    @property
+    def name(self) -> str:
+        name = f"recur{self.order}"
+        if self.streamed:
+            name += "_streamed"
+        if self.reverse:
+            name += "_rev"
+        return name
+
+    def passes(self) -> tuple:
+        """``(pass,)`` — a recurrence is ONE sweep pass (no partner)."""
+        return (_RECUR_TABLE[self.order],)
+
+    @property
+    def resident_name(self) -> str:
+        return dataclasses.replace(self, streamed=False).name
+
+    def twin_name(self) -> str:
+        """Name of the reversed twin (same pass table, mirrored walk)."""
+        return dataclasses.replace(self, reverse=not self.reverse).name
+
+    def dummy_args(self, n: int, m: int, dtype=jnp.float32) -> tuple:
+        """``(args, eps)`` zero-filled operands shaped for
+        ``recurrence_solver``: ``order`` gate arrays then the additive
+        operand, all (n, m).  ``eps`` is always None (no uniform mode)."""
+        return tuple(jnp.zeros((n, m), dtype)
+                     for _ in range(self.order + 1)), None
+
+    # -- derived accounting (no hand-kept tables) ---------------------------
+
+    def traffic_words(self, n: int, m: int) -> int:
+        """HBM<->VMEM words one solve moves: ``order`` gate operands + the
+        additive operand in, h out — identical for resident and streamed
+        (a single pass streams every chunk exactly once; nothing is
+        revisited, unlike the two-pass sweeps)."""
+        return (self.order + 2) * n * m
+
+    def traffic_bytes(self, n: int, m: int, dtype=jnp.float32) -> int:
+        return self.traffic_words(n, m) * jnp.dtype(dtype).itemsize
+
+    def sharded_traffic_words(self, n: int, m: int, n_shards: int) -> int:
+        """PER-DEVICE words with M sharded: every stream is lane-tiled
+        (no replicated shared-LHS term), so everything divides by the
+        shard count (up to mesh padding)."""
+        from .common import shard_lanes
+        return self.traffic_words(n, shard_lanes(m, n_shards))
+
+    def vmem_counts(self) -> tuple:
+        """(n_rhs_blocks, n_lhs_vecs, n_carry_rows): gates + operand + h
+        are all lane-tiled blocks; no shared LHS vectors; ``order`` carry
+        rows thread the streamed chunks."""
+        return self.order + 2, 0, self.order
+
+    @property
+    def num_pallas_calls(self) -> int:
+        """Always 1: a recurrence solve is a single pass, so even the
+        streamed variant is ONE kernel walking its chunks sequentially."""
+        return 1
+
 
 def _all_specs() -> tuple:
     specs = []
@@ -297,6 +426,11 @@ def _all_specs() -> tuple:
                                            streamed=streamed, uniform=True))
         for streamed in (False, True):
             specs.append(SweepSpec(bw, "batch", streamed=streamed))
+    for order in (1, 2):
+        for reverse in (False, True):
+            for streamed in (False, True):
+                specs.append(RecurrenceSpec(order, reverse=reverse,
+                                            streamed=streamed))
     return tuple(specs)
 
 
@@ -346,6 +480,20 @@ def find_spec(bandwidth: int, mode: str, *, streamed: bool = False,
             f"{sorted(REGISTRY)}") from None
 
 
+def find_recurrence_spec(order: int, *, reverse: bool = False,
+                         streamed: bool = False) -> RecurrenceSpec:
+    """Look up the registered gated-recurrence spec for ``order`` with
+    the requested walk direction and residency.  Unknown orders raise
+    ``ValueError`` naming the valid choices."""
+    if order not in (1, 2):
+        raise ValueError(
+            f"no recurrence kernels for order={order!r}; the engine "
+            f"serves order 1 (h = p*h' + q) and order 2 "
+            f"(h = s*h' + t*h'' + u)")
+    name = RecurrenceSpec(order, reverse=reverse, streamed=streamed).name
+    return REGISTRY[name]
+
+
 def pass_table() -> dict:
     """A copy of the shared-layout pass tables, keyed by
     ``(bandwidth, uniform, transposed)`` — the introspection hook
@@ -361,13 +509,27 @@ def batch_backward_table() -> dict:
     return dict(_BATCH_BWD)
 
 
+def recurrence_table() -> dict:
+    """A copy of the gated-recurrence pass table, keyed by carry order —
+    the introspection hook ``repro.analysis.speccheck`` audits."""
+    return dict(_RECUR_TABLE)
+
+
 def traffic_table(bandwidth: int, n: int, m: int, dtype=jnp.float32) -> dict:
-    """{variant_key: bytes} for every registered spec of ``bandwidth`` —
-    keys are the spec names minus the thomas_/penta_ prefix (``constant``,
-    ``constant_streamed_t``, ``batch_streamed``, …)."""
+    """{variant_key: bytes} for every registered sweep spec of
+    ``bandwidth`` — keys are the spec names minus the thomas_/penta_
+    prefix (``constant``, ``constant_streamed_t``, ``batch_streamed``, …).
+    Recurrence specs key their own family; see ``recurrence_traffic_table``."""
     prefix = ("thomas_" if bandwidth == 3 else "penta_")
     return {s.name[len(prefix):]: s.traffic_bytes(n, m, dtype)
-            for s in REGISTRY.values() if s.bandwidth == bandwidth}
+            for s in REGISTRY.values()
+            if isinstance(s, SweepSpec) and s.bandwidth == bandwidth}
+
+
+def recurrence_traffic_table(n: int, m: int, dtype=jnp.float32) -> dict:
+    """{spec_name: bytes} for every registered recurrence spec."""
+    return {s.name: s.traffic_bytes(n, m, dtype)
+            for s in REGISTRY.values() if isinstance(s, RecurrenceSpec)}
 
 
 # ---------------------------------------------------------------------------
@@ -684,6 +846,104 @@ def batch_solver(spec: SweepSpec):
             scratch_shapes=[pltpu.VMEM((spec.order, block_m), dtype)],
             interpret=interpret,
         )(*coefs, mid)
+    return solver
+
+
+# ---------------------------------------------------------------------------
+# Recurrence-layout kernels (per-token gate operands, single pass)
+# ---------------------------------------------------------------------------
+
+def _gate_coeff(refs):
+    """Coefficient accessor for the recurrence layout: a (BLOCK_M,) gate
+    vector per sweep row, read NEGATED from per-token (N, BLOCK_M) refs —
+    ``_solve_pass`` subtracts its terms, a recurrence adds, and IEEE
+    negation is exact, so ``q - (-p)*h`` is bitwise ``q + p*h``."""
+    def at(src, i):
+        return -row(refs[src], i, refs[src].shape[1])
+    return at
+
+
+def _recurrence_resident_kernel(*refs, spec: RecurrenceSpec, n: int,
+                                unroll: int):
+    """The whole recurrence in one kernel: a single ``_solve_pass`` over
+    the resident (N, BLOCK_M) tiles, walked forward or reverse."""
+    gate_refs, in_ref, out_ref = refs[:spec.order], refs[-2], refs[-1]
+    (pspec,) = spec.passes()
+    m = in_ref.shape[1]
+    zeros = (jnp.zeros((m,), in_ref.dtype),) * spec.order
+    _solve_pass(_gate_coeff(gate_refs), in_ref, out_ref, zeros, pspec=pspec,
+                order=spec.order, length=n, reverse=spec.reverse,
+                unroll=unroll)
+
+
+def _recurrence_streamed_kernel(*refs, spec: RecurrenceSpec, block_n: int,
+                                unroll: int):
+    """One (BLOCK_N, BLOCK_M) chunk of the recurrence; the carry scratch
+    threads h across the sequential N-chunk grid steps.  Reverse variants
+    get DESCENDING chunks from their index maps, so inside the kernel the
+    walk is the same reverse loop the resident kernel runs."""
+    gate_refs = refs[:spec.order]
+    in_ref, out_ref, carry_ref = refs[spec.order], refs[spec.order + 1], \
+        refs[-1]
+    (pspec,) = spec.passes()
+    m = in_ref.shape[1]
+    reset_carry(carry_ref, pl.program_id(1))
+    init = tuple(row(carry_ref, j, m) for j in range(spec.order))
+    final = _solve_pass(_gate_coeff(gate_refs), in_ref, out_ref, init,
+                        pspec=pspec, order=spec.order, length=block_n,
+                        reverse=spec.reverse, unroll=unroll)
+    for j in range(spec.order):
+        store_row(carry_ref, j, final[j])
+
+
+@functools.lru_cache(maxsize=None)
+def recurrence_solver(spec: RecurrenceSpec):
+    """Compile ``spec`` into its jitted pallas entry point:
+    ``solver(*gates, q, *, block_m, [block_n,] unroll, interpret)``.
+
+    ``gates`` are the ``order`` per-token (N, M) gate arrays (lag-1 first)
+    and ``q`` the additive operand; all carries start at zero — nonzero
+    h0 is folded into the boundary rows of ``q`` by the dispatcher
+    (``repro.kernels.ops.recurrence``), which keeps the kernels on the
+    same zero-carry protocol as every sweep kernel.  Callers pad:
+    M % block_m == 0, and for streamed specs N % block_n == 0 (zero
+    padding is exact: padded gate rows multiply a finite carry by 0)."""
+    assert isinstance(spec, RecurrenceSpec)
+
+    if not spec.streamed:
+        @functools.partial(jax.jit,
+                           static_argnames=("block_m", "unroll", "interpret"))
+        def solver(*args, block_m=128, unroll=1, interpret=True):
+            n, m = args[-1].shape
+            sp = _col_spec(n, block_m)
+            return pl.pallas_call(
+                functools.partial(_recurrence_resident_kernel, spec=spec,
+                                  n=n, unroll=unroll),
+                grid=(m // block_m,),
+                in_specs=[sp] * (spec.order + 1),
+                out_specs=sp,
+                out_shape=jax.ShapeDtypeStruct((n, m), args[-1].dtype),
+                interpret=interpret,
+            )(*args)
+        return solver
+
+    @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                                 "unroll", "interpret"))
+    def solver(*args, block_m=128, block_n=512, unroll=1, interpret=True):
+        n, m = args[-1].shape
+        num_n = n // block_n
+        csp = chunk_spec(block_n, block_m, num_n, reverse=spec.reverse)
+        return pl.pallas_call(
+            functools.partial(_recurrence_streamed_kernel, spec=spec,
+                              block_n=block_n, unroll=unroll),
+            grid=(m // block_m, num_n),
+            in_specs=[csp] * (spec.order + 1),
+            out_specs=csp,
+            out_shape=jax.ShapeDtypeStruct((n, m), args[-1].dtype),
+            scratch_shapes=[pltpu.VMEM((spec.order, block_m),
+                                       args[-1].dtype)],
+            interpret=interpret,
+        )(*args)
     return solver
 
 

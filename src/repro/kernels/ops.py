@@ -28,7 +28,9 @@ from repro.core import (PentaFactor, PeriodicPentaFactor,
                         PeriodicTridiagFactor, TridiagFactor)
 from .common import (check_vmem, check_vmem_streamed, default_interpret,
                      pad_lanes, pad_sweep)
-from .engine import SweepSpec, batch_solver, find_spec, shared_solver
+from .engine import (RecurrenceSpec, SweepSpec, batch_solver,
+                     find_recurrence_spec, find_spec, recurrence_solver,
+                     shared_solver)
 from .fused_cn import fused_cn_tridiag_pallas
 from .fused_cn_penta import fused_cn_penta_pallas
 
@@ -208,6 +210,65 @@ def penta_batch(a, b, c, d, e, rhs, *, block_m: int = 128,
     return x[:n, :m]
 
 
+def recurrence(*operands, h0=None, reverse: bool = False,
+               block_m: int = 128, block_n: int | None = None,
+               unroll: int = 1, interpret: bool | None = None) -> jax.Array:
+    """Gated linear recurrence over an interleaved (N, M) batch.
+
+    ``operands`` is ``(p, q)`` for the order-1 recurrence
+    ``h_i = p_i h_{i-1} + q_i`` or ``(s, t, u)`` for the order-2
+    ``h_i = s_i h_{i-1} + t_i h_{i-2} + u_i`` — per-token (N, M) gate
+    arrays plus the additive operand, the recurrence-layout analogue of
+    the batch solvers' per-lane diagonals.  ``reverse=True`` runs from
+    i = N-1 down to 0 (carries index i+1/i+2).
+
+    ``h0`` seeds the incoming carries (an array broadcastable over lanes
+    for order 1, a ``(h_{-1}, h_{-2})`` pair for order 2).  It is folded
+    into the boundary rows of ``q`` ON THE HOST — the kernels keep the
+    zero-carry protocol every sweep kernel shares (``reset_carry``), so
+    streamed chunking and the zero sweep-padding stay exact: a padded
+    gate row multiplies a finite carry by 0.
+
+    ``block_n=None`` runs the VMEM-resident kernel; an integer selects
+    the HBM-streamed split-N kernel (a SINGLE kernel, not a pair — a
+    recurrence has no back-substitution partner)."""
+    if interpret is None:
+        interpret = default_interpret()
+    *gates, q = (jnp.asarray(x) for x in operands)
+    order = len(gates)
+    if order not in (1, 2):
+        raise ValueError(
+            f"recurrence takes (p, q) or (s, t, u); got {order + 1} operands")
+    n, m = q.shape
+    if h0 is not None:
+        hs = (h0,) if order == 1 and not isinstance(h0, (tuple, list)) \
+            else tuple(h0)
+        if len(hs) != order:
+            raise ValueError(f"h0 must carry {order} state(s), got {len(hs)}")
+        hs = tuple(jnp.broadcast_to(jnp.asarray(h), q.shape[1:]).astype(
+            q.dtype) for h in hs)
+        e0 = n - 1 if reverse else 0
+        fold = gates[0][e0] * hs[0]
+        if order == 2:
+            fold = fold + gates[1][e0] * hs[1]
+        q = q.at[e0].add(fold)
+        if order == 2 and n > 1:
+            e1 = n - 2 if reverse else 1
+            q = q.at[e1].add(gates[1][e1] * hs[0])
+    spec = find_recurrence_spec(order, reverse=reverse,
+                                streamed=block_n is not None)
+    _check_spec_vmem(spec, n, block_m, block_n, q.dtype)
+    args = [pad_lanes(x, block_m)[0] for x in (*gates, q)]
+    if block_n is None:
+        h = recurrence_solver(spec)(*args, block_m=block_m, unroll=unroll,
+                                    interpret=interpret)
+        return h[:, :m]
+    args = [pad_sweep(x, block_n, axis=0)[0] for x in args]
+    h = recurrence_solver(spec)(*args, block_m=block_m, block_n=block_n,
+                                unroll=unroll, interpret=interpret)
+    return h[:n, :m]
+
+
 def fused_cn_step(pf: PeriodicTridiagFactor, sigma: float, c: jax.Array, *,
                   block_m: int = 128, unroll: int = 1,
                   interpret: bool | None = None) -> jax.Array:
@@ -268,14 +329,26 @@ ENTRY_POINTS = {
     (3, "batch"): thomas_batch,
     (5, "shared"): penta_constant,
     (5, "batch"): penta_batch,
+    (1, "recurrence"): recurrence,
+    (2, "recurrence"): recurrence,
 }
 
 
-def entry_point(spec: SweepSpec):
+def entry_key(spec) -> tuple:
+    """The ``ENTRY_POINTS`` key a registered spec dispatches through —
+    sweep specs key on (bandwidth, layout), recurrence specs on
+    (order, 'recurrence')."""
+    if isinstance(spec, RecurrenceSpec):
+        return (spec.order, spec.layout)
+    return (spec.bandwidth, spec.layout)
+
+
+def entry_point(spec):
     """The ops-layer callable that dispatches ``spec`` (see the per-entry
     docstrings for the keyword contract: shared specs take a factor +
-    ``transposed``/``uniform`` flags, batch specs take raw diagonals)."""
-    return ENTRY_POINTS[(spec.bandwidth, spec.layout)]
+    ``transposed``/``uniform`` flags, batch specs take raw diagonals,
+    recurrence specs take per-token gate operands + ``reverse``)."""
+    return ENTRY_POINTS[entry_key(spec)]
 
 
 def solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int, m: int, *,
@@ -292,6 +365,16 @@ def solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int, m: int, *,
         transposed = False
     spec = find_spec(bandwidth, mode, streamed=streamed,
                      transposed=transposed)
+    return spec.traffic_bytes(n, m, dtype)
+
+
+def recurrence_hbm_traffic_bytes(order: int, n: int, m: int, *,
+                                 dtype=jnp.float32, streamed: bool = False,
+                                 reverse: bool = False) -> int:
+    """Bytes moved HBM<->VMEM by one gated recurrence over an (n, m)
+    batch — derived from the registered ``RecurrenceSpec`` exactly like
+    the solver model (unknown orders raise via ``find_recurrence_spec``)."""
+    spec = find_recurrence_spec(order, reverse=reverse, streamed=streamed)
     return spec.traffic_bytes(n, m, dtype)
 
 

@@ -34,7 +34,7 @@ def _is_spec(x) -> bool:
 
 
 def tree_size(spec_tree) -> int:
-    return int(sum(np.prod(s.shape) for s in
+    return int(sum(np.prod(s.shape) for s in  # speclint: allow-concretize
                    jax.tree_util.tree_leaves(spec_tree, is_leaf=_is_spec)))
 
 

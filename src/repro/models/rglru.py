@@ -58,7 +58,10 @@ def rglru_apply(p, x, sctx: ShardingCtx, cfg: ArchConfig):
     a, q = _gates(p, xr)                                     # (B, S, R) fp32
     a_t = jnp.moveaxis(a, 1, 0)                              # (S, B, R)
     q_t = jnp.moveaxis(q, 1, 0)
-    h = linear_recurrence(a_t, q_t)                          # (S, B, R)
+    # auto policy: the engine's gated-recurrence Pallas kernels (fp32
+    # carries — the gates were computed fp32 above, bf16 activations stay
+    # bf16 outside the scan)
+    h = linear_recurrence(a_t, q_t, method="auto")           # (S, B, R)
     h = jnp.moveaxis(h, 0, 1).astype(x.dtype)                # (B, S, R)
 
     out = jnp.einsum("bsr,rd->bsd", h * gate, p["out"])

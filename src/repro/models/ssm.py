@@ -101,7 +101,10 @@ def ssd_chunked(xh, dt, A_log, Bm, Cm, chunk: int):
 
     p_t = jnp.moveaxis(p_chunk, 1, 0)[..., None, None]       # (nc, B, H, 1, 1)
     q_t = jnp.moveaxis(S_c, 1, 0)                            # (nc, B, H, P, N)
-    S_run = linear_recurrence(p_t, q_t)                      # inclusive prefix
+    # auto policy: the engine's gated-recurrence Pallas kernels; the
+    # per-chunk decay broadcasts to a full gate operand on dispatch
+    # (fp32 carries — everything above is fp32 already)
+    S_run = linear_recurrence(p_t, q_t, method="auto")       # inclusive prefix
     S_prev = jnp.concatenate([jnp.zeros_like(S_run[:1]), S_run[:-1]], axis=0)
     S_prev = jnp.moveaxis(S_prev, 0, 1)                      # (B, nc, H, P, N)
 

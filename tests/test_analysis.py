@@ -38,7 +38,7 @@ def test_trace_covers_full_registry():
     # capture harness — the checkers cannot silently skip a variant
     for spec in REGISTRY.values():
         records = capture.trace_spec_calls(spec)
-        assert len(records) == (2 if spec.streamed else 1), spec.name
+        assert len(records) == spec.num_pallas_calls, spec.name
 
 
 def test_tracecheck_matrix_spans_backends():
@@ -46,6 +46,11 @@ def test_tracecheck_matrix_spans_backends():
     cases = tracecheck.contract_cases()
     assert {c[0] for c in cases} == set(available_pure_backends())
     assert len(cases) == len(available_pure_backends()) * 2 * 3 * 2
+
+
+def test_tracecheck_covers_recurrence_family():
+    # 2 orders x fwd/rev x zero-carry/seeded
+    assert len(tracecheck.recurrence_cases()) == 8
 
 
 # ---------------------------------------------------------------------------
@@ -64,8 +69,8 @@ def test_mutation_detected(mutation_results, defect):
     assert result.evidence
 
 
-def test_mutation_covers_five_classes():
-    assert len(mutation._MUTATIONS) >= 5
+def test_mutation_covers_six_classes():
+    assert len(mutation._MUTATIONS) >= 6
 
 
 def test_mutations_fully_reverted():

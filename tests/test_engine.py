@@ -18,7 +18,8 @@ from repro.core import (penta_factor, penta_factor_solve, penta_solve,
                         penta_solve_t, thomas_factor, thomas_factor_solve,
                         thomas_solve, thomas_solve_t)
 from repro.kernels import ops as kops
-from repro.kernels.engine import REGISTRY, SweepSpec, find_spec
+from repro.kernels.engine import (REGISTRY, RecurrenceSpec, SweepSpec,
+                                  find_recurrence_spec, find_spec)
 
 # ragged on both axes: exercises lane padding and sweep padding
 N, M = 45, 70
@@ -59,11 +60,41 @@ def _batch_diags(rng, bandwidth):
     return tuple(map(jnp.asarray, (a, b, c, d, e)))
 
 
-def _run_spec(spec: SweepSpec, rhs):
+def _recurrence_gates(rng, order):
+    """Stable per-token gate operands (|s| + |t| < 1 bounds the carries)."""
+    scales = (0.9,) if order == 1 else (0.6, 0.3)
+    return tuple(jnp.asarray(rng.uniform(-s, s, (N, M)).astype(np.float32))
+                 for s in scales)
+
+
+def _recurrence_reference(gates, q, reverse):
+    """Token-by-token numpy scan: h_i = q_i + sum_k gate_k[i] * h_{i-k}."""
+    gates = [np.asarray(g) for g in gates]
+    q = np.asarray(q)
+    h = np.zeros_like(q)
+    carries = [np.zeros(q.shape[1], q.dtype) for _ in gates]
+    for i in (range(N - 1, -1, -1) if reverse else range(N)):
+        v = q[i].copy()
+        for g, c in zip(gates, carries):
+            v += g[i] * c
+        h[i] = v
+        carries = [v] + carries[:-1]
+    return h
+
+
+def _run_spec(spec, rhs):
     """Dispatch ``rhs`` through the ops layer exactly as the solver backend
     would, returning (got, want) for the parity check."""
     # seed on the streaming-invariant fields so a streamed spec and its
     # resident sibling solve the SAME system (the bit-exactness pairing)
+    if isinstance(spec, RecurrenceSpec):
+        rng = np.random.default_rng(spec.order * 8 + spec.reverse * 2)
+        gates = _recurrence_gates(rng, spec.order)
+        got = kops.recurrence(*gates, rhs, reverse=spec.reverse,
+                              block_m=BLOCK_M,
+                              block_n=BLOCK_N if spec.streamed else None,
+                              interpret=True)
+        return got, _recurrence_reference(gates, rhs, spec.reverse)
     seed = (spec.bandwidth * 8 + (spec.layout == "batch") * 4
             + spec.transposed * 2 + spec.uniform)
     rng = np.random.default_rng(seed)
@@ -96,8 +127,15 @@ def _run_spec(spec: SweepSpec, rhs):
 
 def test_registry_covers_the_variant_matrix():
     """2 bandwidths x (shared: fwd/transposed x resident/streamed
-    [x uniform for penta]) + (batch: resident/streamed) = 16 specs."""
-    assert len(REGISTRY) == 16
+    [x uniform for penta]) + (batch: resident/streamed) = 16 sweep specs,
+    plus the gated recurrence family (2 orders x fwd/rev x
+    resident/streamed) = 24 specs total."""
+    assert len(REGISTRY) == 24
+    for order in (1, 2):
+        for reverse in (False, True):
+            for streamed in (False, True):
+                assert RecurrenceSpec(order, reverse=reverse,
+                                      streamed=streamed).name in REGISTRY
     for bw in (3, 5):
         for transposed in (False, True):
             for streamed in (False, True):
@@ -165,6 +203,14 @@ def test_every_registered_spec_has_a_traffic_entry():
         words = spec.traffic_words(n, m)
         assert isinstance(words, int) and words > 0
         assert spec.traffic_bytes(n, m, jnp.float64) == 8 * words
+        if isinstance(spec, RecurrenceSpec):
+            # single-pass family: streaming revisits nothing, and the ops
+            # resolver lands on the same registered spec
+            assert words == (spec.order + 2) * n * m
+            assert kops.recurrence_hbm_traffic_bytes(
+                spec.order, n, m, streamed=spec.streamed,
+                reverse=spec.reverse) == spec.traffic_bytes(n, m)
+            continue
         if spec.layout == "batch":
             continue
         # the dispatcher resolves the same spec to the same number
@@ -183,14 +229,15 @@ def test_every_registered_spec_has_a_traffic_entry():
 def test_traffic_derivation_matches_paper_numbers():
     """The derived model reproduces the hand-derived paper/PR-3 numbers."""
     n, m = 1024, 4096
-    tri = {s.name: s for s in REGISTRY.values() if s.bandwidth == 3}
+    sweeps = [s for s in REGISTRY.values() if isinstance(s, SweepSpec)]
+    tri = {s.name: s for s in sweeps if s.bandwidth == 3}
     assert tri["thomas_constant"].traffic_words(n, m) == 2 * n * m + 3 * n
     assert tri["thomas_batch"].traffic_words(n, m) == 5 * n * m
     assert tri["thomas_constant_streamed"].traffic_words(n, m) \
         == 2 * (2 * n * m + 3 * n)
     # batch streamed: 4 in + 2 out (fwd, c_hat spilled) + 2 in + 1 out (bwd)
     assert tri["thomas_batch_streamed"].traffic_words(n, m) == 9 * n * m
-    pen = {s.name: s for s in REGISTRY.values() if s.bandwidth == 5}
+    pen = {s.name: s for s in sweeps if s.bandwidth == 5}
     assert pen["penta_uniform"].traffic_words(n, m) == 2 * n * m + 4 * n + 1
     # batch streamed: 6 in + 3 out (fwd, gamma/delta spilled) + 3 in + 1 out
     assert pen["penta_batch_streamed"].traffic_words(n, m) == 13 * n * m
@@ -225,6 +272,11 @@ def test_find_spec_errors_name_valid_choices():
         find_spec(3, "batch", transposed=True)
     # tridiag uniform aliases to the constant kernel (no eps row to drop)
     assert find_spec(3, "uniform").name == "thomas_constant"
+    # the recurrence lookup names its valid orders the same way
+    with pytest.raises(ValueError, match="order 1 .* and order 2"):
+        find_recurrence_spec(3)
+    assert find_recurrence_spec(2, reverse=True,
+                                streamed=True).name == "recur2_streamed_rev"
 
 
 def test_traffic_bytes_errors_are_informative():

@@ -1,0 +1,308 @@
+"""The gated linear-recurrence family end to end.
+
+Four contracts, layered the way the stack is:
+
+  * **method parity** — ``linear_recurrence{,2}`` agree across
+    scan / assoc / pallas over the full (reverse x h0 x dtype) matrix,
+    against an order-agnostic numpy loop (satellite: the historical
+    parity gaps — nonzero h0 on assoc, reverse on assoc, bf16 dtype
+    promotion — stay closed).
+  * **bit-exact streaming** — forcing the streamed kernel (block_n)
+    reproduces the resident kernel bit for bit, like every sweep spec.
+  * **grad** — ``jax.grad`` through the Pallas custom_vjp matches the
+    scan path for both orders, including the h0 cotangent.
+  * **decode consistency** — the sequence models' single-token decode
+    steps, replayed over a prompt, reproduce the full-sequence apply
+    that now runs on the engine's Pallas recurrence kernels.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.recurrence import (_resolve, linear_recurrence,
+                                   linear_recurrence2)
+
+N, M = 37, 19  # ragged against every lane/sweep tile
+
+
+def _ref1(p, q, h0, reverse):
+    p = np.asarray(p, np.float64)
+    q = np.asarray(q, np.float64)
+    p = np.broadcast_to(p.reshape((-1,) + (1,) * (q.ndim - 1))
+                        if p.ndim == 1 else p, q.shape)
+    n = q.shape[0]
+    carry = (np.zeros(q.shape[1:]) if h0 is None
+             else np.broadcast_to(np.asarray(h0, np.float64), q.shape[1:]))
+    h = np.zeros_like(q)
+    for i in (range(n - 1, -1, -1) if reverse else range(n)):
+        carry = p[i] * carry + q[i]
+        h[i] = carry
+    return h
+
+
+def _ref2(s, t, u, h0, reverse):
+    s = np.asarray(s, np.float64)
+    t = np.asarray(t, np.float64)
+    u = np.asarray(u, np.float64)
+    bshape = ((-1,) + (1,) * (u.ndim - 1))
+    s = np.broadcast_to(s.reshape(bshape) if s.ndim == 1 else s, u.shape)
+    t = np.broadcast_to(t.reshape(bshape) if t.ndim == 1 else t, u.shape)
+    n = u.shape[0]
+    if h0 is None:
+        c1 = c2 = np.zeros(u.shape[1:])
+    else:
+        c1 = np.broadcast_to(np.asarray(h0[0], np.float64), u.shape[1:])
+        c2 = np.broadcast_to(np.asarray(h0[1], np.float64), u.shape[1:])
+    h = np.zeros_like(u)
+    for i in (range(n - 1, -1, -1) if reverse else range(n)):
+        v = s[i] * c1 + t[i] * c2 + u[i]
+        h[i] = v
+        c2, c1 = c1, v
+    return h
+
+
+def _operands(rng, order, dtype):
+    scales = (0.9,) if order == 1 else (0.6, 0.3)
+    gates = [rng.uniform(-sc, sc, (N, M)).astype(np.float32) for sc in scales]
+    q = rng.normal(size=(N, M)).astype(np.float32)
+    h0 = [rng.normal(size=M).astype(np.float32) * 0.5 for _ in range(order)]
+    to = lambda a: jnp.asarray(a).astype(dtype)
+    return tuple(map(to, gates)), to(q), tuple(map(to, h0))
+
+
+# ---------------------------------------------------------------------------
+# Method parity: scan / assoc / pallas x reverse x h0 x dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["scan", "assoc", "pallas"])
+@pytest.mark.parametrize("reverse", [False, True])
+@pytest.mark.parametrize("with_h0", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_order1_method_parity(method, reverse, with_h0, dtype):
+    rng = np.random.default_rng(3)
+    (p,), q, (h0,) = _operands(rng, 1, dtype)
+    h0 = h0 if with_h0 else None
+    got = linear_recurrence(p, q, h0, reverse=reverse, method=method,
+                            interpret=True)
+    assert got.shape == (N, M) and got.dtype == dtype
+    want = _ref1(np.asarray(p, np.float64), np.asarray(q, np.float64),
+                 None if h0 is None else np.asarray(h0, np.float64), reverse)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("method", ["scan", "assoc", "pallas"])
+@pytest.mark.parametrize("reverse", [False, True])
+@pytest.mark.parametrize("with_h0", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_order2_method_parity(method, reverse, with_h0, dtype):
+    rng = np.random.default_rng(5)
+    (s, t), u, h0 = _operands(rng, 2, dtype)
+    h0 = h0 if with_h0 else None
+    got = linear_recurrence2(s, t, u, h0, reverse=reverse, method=method,
+                             interpret=True)
+    assert got.shape == (N, M) and got.dtype == dtype
+    want = _ref2(s, t, u,
+                 None if h0 is None else [np.asarray(h, np.float64)
+                                          for h in h0], reverse)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("method", ["scan", "assoc", "pallas"])
+def test_mixed_dtype_promotes_not_crashes(method):
+    """bf16 operand + fp32 gate: every method computes in the promoted
+    dtype (the scan path used to crash on the carry dtype mismatch)."""
+    rng = np.random.default_rng(9)
+    p = jnp.asarray(rng.uniform(-0.9, 0.9, N).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(N, M)).astype(np.float32)).astype(
+        jnp.bfloat16)
+    got = linear_recurrence(p, q, method=method, interpret=True)
+    assert got.dtype == jnp.float32
+    want = _ref1(p, np.asarray(q, np.float64), None, False)
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_shared_1d_gate_broadcasts():
+    rng = np.random.default_rng(11)
+    p = jnp.asarray(rng.uniform(-0.9, 0.9, N).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(N, 3, 5)).astype(np.float32))
+    got = linear_recurrence(p, q, method="pallas", interpret=True)
+    want = linear_recurrence(p, q, method="scan")
+    assert got.shape == (N, 3, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_auto_policy_routes_floats_to_pallas():
+    assert _resolve("auto", jnp.float32) == "pallas"
+    assert _resolve("auto", jnp.bfloat16) == "pallas"
+    assert _resolve("auto", jnp.int32) == "scan"
+    with pytest.raises(ValueError, match="unknown method"):
+        _resolve("woops", jnp.float32)
+
+
+def test_integer_recurrence_stays_exact_on_scan():
+    p = jnp.full((4,), 2, jnp.int32)
+    q = jnp.ones((4, 2), jnp.int32)
+    got = linear_recurrence(p, q, method="auto")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  [[1, 1], [3, 3], [7, 7], [15, 15]])
+
+
+@pytest.mark.parametrize("order", [1, 2])
+@pytest.mark.parametrize("reverse", [False, True])
+def test_pallas_matches_scan_within_1e5(order, reverse):
+    """The acceptance bar: fp32 Pallas vs the reference scan, <= 1e-5."""
+    rng = np.random.default_rng(29)
+    gates, q, h0 = _operands(rng, order, jnp.float32)
+    fn = linear_recurrence if order == 1 else linear_recurrence2
+    h0 = h0[0] if order == 1 else h0
+    got = fn(*gates, q, h0, reverse=reverse, method="pallas", interpret=True)
+    want = fn(*gates, q, h0, reverse=reverse, method="scan")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Streaming bit-exactness through the front end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", [1, 2])
+@pytest.mark.parametrize("reverse", [False, True])
+def test_streamed_front_end_bit_exact(order, reverse):
+    rng = np.random.default_rng(13)
+    gates, q, h0 = _operands(rng, order, jnp.float32)
+    fn = linear_recurrence if order == 1 else linear_recurrence2
+    h0 = h0[0] if order == 1 else h0
+    resident = fn(*gates, q, h0, reverse=reverse, method="pallas",
+                  block_m=64, block_n=None, interpret=True)
+    streamed = fn(*gates, q, h0, reverse=reverse, method="pallas",
+                  block_m=64, block_n=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(resident), np.asarray(streamed))
+
+
+# ---------------------------------------------------------------------------
+# Gradients through the Pallas custom_vjp vs the scan reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("reverse", [False, True])
+def test_order1_grad_matches_scan(reverse):
+    rng = np.random.default_rng(17)
+    (p,), q, (h0,) = _operands(rng, 1, jnp.float32)
+
+    def loss(method):
+        def f(p_, q_, h0_):
+            h = linear_recurrence(p_, q_, h0_, reverse=reverse,
+                                  method=method, interpret=True)
+            return jnp.sum(jnp.cos(h))
+        return f
+
+    gp, gq, gh = jax.grad(loss("pallas"), argnums=(0, 1, 2))(p, q, h0)
+    sp, sq, sh = jax.grad(loss("scan"), argnums=(0, 1, 2))(p, q, h0)
+    for a, b in ((gp, sp), (gq, sq), (gh, sh)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("reverse", [False, True])
+def test_order2_grad_matches_scan(reverse):
+    rng = np.random.default_rng(19)
+    (s, t), u, h0 = _operands(rng, 2, jnp.float32)
+
+    def loss(method):
+        def f(s_, t_, u_, h1_, h2_):
+            h = linear_recurrence2(s_, t_, u_, (h1_, h2_), reverse=reverse,
+                                   method=method, interpret=True)
+            return jnp.sum(jnp.sin(h))
+        return f
+
+    got = jax.grad(loss("pallas"), argnums=(0, 1, 2, 3, 4))(s, t, u, *h0)
+    want = jax.grad(loss("scan"), argnums=(0, 1, 2, 3, 4))(s, t, u, *h0)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Decode-vs-apply consistency at the module level (the models run the
+# engine's Pallas recurrence kernels under the auto policy)
+# ---------------------------------------------------------------------------
+
+def _sctx():
+    from repro.sharding import LogicalRules, ShardingCtx
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return ShardingCtx(mesh=jax.sharding.Mesh(devs, ("data", "model")),
+                       rules=LogicalRules.default())
+
+
+def test_rglru_decode_replay_matches_apply():
+    from repro.configs import get_smoke_config
+    from repro.models.params import init_params
+    from repro.models.rglru import rglru_apply, rglru_decode_step, rglru_specs
+
+    cfg = get_smoke_config("recurrentgemma_9b")
+    p = init_params(rglru_specs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 9
+    rng = np.random.default_rng(21)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.3, dt)
+
+    out_full, (h_last, conv_tail) = rglru_apply(p, x, _sctx(), cfg)
+
+    R, W = cfg.rnn_dim, cfg.conv_width
+    h = jnp.zeros((B, R), jnp.float32)
+    buf = jnp.zeros((B, W - 1, R), dt)
+    outs = []
+    for s in range(S):
+        o, h, buf = rglru_decode_step(p, x[:, s], h, buf, cfg)
+        outs.append(o)
+    stepped = jnp.stack(outs, axis=1)
+
+    np.testing.assert_allclose(np.asarray(stepped, np.float32),
+                               np.asarray(out_full, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_last),
+                               rtol=3e-2, atol=3e-2)
+    np.testing.assert_allclose(np.asarray(buf, np.float32),
+                               np.asarray(conv_tail, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_ssm_decode_replay_matches_apply():
+    from repro.configs import get_smoke_config
+    from repro.models.params import init_params
+    from repro.models.ssm import ssm_apply, ssm_decode_step, ssm_specs
+
+    cfg = get_smoke_config("mamba2_130m")
+    p = init_params(ssm_specs(cfg), jax.random.PRNGKey(1))
+    B = 2
+    S = cfg.ssm_chunk * 3  # spans several inter-chunk carries
+    rng = np.random.default_rng(23)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.3, dt)
+
+    out_full, state_full, _tails = ssm_apply(p, x, _sctx(), cfg)
+
+    H, P, Nst, W = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                    cfg.conv_width)
+    state = jnp.zeros((B, H, P, Nst), jnp.float32)
+    bufs = {"x": jnp.zeros((B, W - 1, cfg.d_inner), dt),
+            "B": jnp.zeros((B, W - 1, Nst), dt),
+            "C": jnp.zeros((B, W - 1, Nst), dt)}
+    outs = []
+    for s in range(S):
+        o, state, bufs = ssm_decode_step(p, x[:, s], state, bufs, cfg)
+        outs.append(o)
+    stepped = jnp.stack(outs, axis=1)
+
+    np.testing.assert_allclose(np.asarray(stepped, np.float32),
+                               np.asarray(out_full, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_full),
+                               rtol=3e-2, atol=3e-2)

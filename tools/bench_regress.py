@@ -1,0 +1,90 @@
+"""Benchmark regression gate: diff fresh bench rows against a baseline.
+
+``benchmarks/run.py --json`` writes ``BENCH_solvers.json`` — a list of
+``{name, us_per_call, backend, n, m}`` rows.  The committed copy is the
+baseline; CI regenerates the rows and runs this script to compare the
+two by row NAME:
+
+  * a matched row that got more than ``--threshold`` (default 1.5x)
+    slower fails the gate — on the hosted-runner noise floor a genuine
+    1.5x is a broken dispatch (a kernel silently falling back to a
+    reference path), not jitter;
+  * rows only in the fresh file are fine (new benchmarks land freely);
+  * rows only in the baseline fail — a silently DROPPED benchmark is the
+    easiest way for a perf regression to hide.
+
+    PYTHONPATH=src python -m benchmarks.run --json
+    python tools/bench_regress.py BENCH_solvers.json --baseline <committed>
+
+In CI the committed baseline is snapshotted (``git show HEAD:...``)
+before the fresh run overwrites the file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_rows(path: Path) -> dict:
+    rows = json.loads(path.read_text())
+    out = {}
+    for row in rows:
+        name, us = row.get("name"), row.get("us_per_call")
+        if not isinstance(name, str) or not isinstance(us, (int, float)):
+            raise SystemExit(f"error: malformed row in {path}: {row!r}")
+        if name in out:
+            raise SystemExit(f"error: duplicate row name {name!r} in {path}")
+        out[name] = float(us)
+    return out
+
+
+def compare(fresh: dict, baseline: dict, threshold: float) -> list:
+    """Human-readable failure lines (empty = gate passes)."""
+    failures = []
+    for name in sorted(baseline):
+        if name not in fresh:
+            failures.append(f"DROPPED  {name}: in baseline but not in the "
+                            f"fresh run — benchmarks may only be removed "
+                            f"with the baseline")
+            continue
+        was, now = baseline[name], fresh[name]
+        if was > 0 and now / was > threshold:
+            failures.append(f"SLOWER   {name}: {was:.1f} -> {now:.1f} us "
+                            f"({now / was:.2f}x > {threshold:.2f}x)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", type=Path, help="freshly generated rows")
+    ap.add_argument("--baseline", type=Path, required=True,
+                    help="committed baseline rows")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed slowdown factor per matched row")
+    args = ap.parse_args()
+
+    fresh = load_rows(args.fresh)
+    baseline = load_rows(args.baseline)
+    failures = compare(fresh, baseline, args.threshold)
+
+    new = sorted(set(fresh) - set(baseline))
+    matched = len(set(fresh) & set(baseline))
+    print(f"bench_regress: {matched} matched row(s), {len(new)} new, "
+          f"threshold {args.threshold:.2f}x")
+    for name in new:
+        print(f"  NEW      {name}: {fresh[name]:.1f} us")
+    for line in failures:
+        print(f"  {line}")
+    if failures:
+        print(f"bench_regress: FAIL ({len(failures)} regression(s))",
+              file=sys.stderr)
+        return 1
+    print("bench_regress: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
