@@ -17,11 +17,14 @@ constant-vs-batch × reference-vs-pallas is one sweep (``backends`` table).
 ``{name, us_per_call, backend, n, m}`` rows (the ``backends`` sweep, penta
 ``batch``-mode rows included, the ``grad_solve`` rows timing the
 custom_vjp adjoint, and the ``recurrence`` rows timing the sequence-model
-substrate) — so the perf trajectory is machine-readable across PRs.  CI
-runs ``--json`` in interpret mode on every push, then diffs the rows
-against the committed baseline with ``tools/bench_regress.py``, so the
-perf plumbing cannot silently rot and a matched row cannot silently get
-1.5x slower.
+substrate) — so the perf trajectory is machine-readable across PRs.
+Kernel-backed rows also carry ``model_bytes`` (the spec-derived expected
+HBM traffic) plus the ``traffic`` key it was resolved from; the regress
+gate re-derives the number from the live registry, so a traffic-model
+drift fails CI exactly like a timing regression.  CI runs ``--json`` in
+interpret mode on every push, then diffs the rows against the committed
+baseline with ``tools/bench_regress.py``, so the perf plumbing cannot
+silently rot and a matched row cannot silently get 1.5x slower.
 """
 
 from __future__ import annotations
@@ -39,10 +42,32 @@ _ROWS: list = []   # machine-readable mirror of the printed CSV
 
 
 def _record(name: str, us_per_call: float, *, backend=None, n=None, m=None,
-            derived: str = ""):
+            derived: str = "", traffic: dict | None = None):
+    """``traffic`` is the spec-resolver key (bandwidth/mode/streamed/fused/
+    storage_dtype, or order/reverse for recurrences); when present the row
+    also carries ``model_bytes`` — the expected HBM traffic re-derived by
+    ``tools/bench_regress.py`` from the same key, so a drifted traffic
+    model fails the bench gate."""
+    row = {"name": name, "us_per_call": round(us_per_call, 1),
+           "backend": backend, "n": n, "m": m}
+    if traffic is not None:
+        row["model_bytes"] = _model_bytes(traffic, n, m)
+        row["traffic"] = traffic
+        derived = (derived + "_" if derived else "") \
+            + f"model_bytes={row['model_bytes']}"
     print(f"{name},{us_per_call:.0f},{derived}")
-    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                  "backend": backend, "n": n, "m": m})
+    _ROWS.append(row)
+
+
+def _model_bytes(traffic: dict, n: int, m: int) -> int:
+    """Resolve a row's traffic key through the kernel spec registry."""
+    from repro.kernels import ops as kops
+    key = dict(traffic)
+    if "order" in key:
+        return kops.recurrence_hbm_traffic_bytes(key.pop("order"), n, m,
+                                                 **key)
+    return kops.solver_hbm_traffic_bytes(key.pop("bandwidth"),
+                                         key.pop("mode"), n, m, **key)
 
 
 def _timeit(fn, *args, reps=3, warmup=1):
@@ -228,7 +253,9 @@ def bench_backends():
                 batch=m if mode == "batch" else None), backend=backend)
             t = _timeit(jax.jit(p.solve), d, reps=2)
             _record(f"solver_tridiag_{mode}_{backend}_N{n}_M{m}", t,
-                    backend=backend, n=n, m=m, derived=f"mode={mode}")
+                    backend=backend, n=n, m=m, derived=f"mode={mode}",
+                    traffic={"bandwidth": 3, "mode": mode}
+                    if backend == "pallas" else None)
     s = 0.11
     for mode in ("constant", "batch"):
         for backend in ("reference", "pallas"):
@@ -237,7 +264,9 @@ def bench_backends():
                 batch=m if mode == "batch" else None), backend=backend)
             t = _timeit(jax.jit(p.solve), d, reps=2)
             _record(f"solver_penta_{mode}_{backend}_N{n}_M{m}", t,
-                    backend=backend, n=n, m=m, derived=f"mode={mode}")
+                    backend=backend, n=n, m=m, derived=f"mode={mode}",
+                    traffic={"bandwidth": 5, "mode": mode}
+                    if backend == "pallas" else None)
     bench_backends_streamed()
 
 
@@ -246,8 +275,11 @@ def bench_backends_streamed():
     at N=16384 the resident pallas working set exceeds the VMEM budget at
     EVERY block_m candidate (even 128 needs 16 MiB), so before PR 3
     ``auto`` could only fall back to reference here.  ``auto`` now
-    resolves to pallas with a streamed ``block_n`` (asserted below, so the
-    fallback cannot silently return)."""
+    resolves to pallas with a streamed ``block_n`` AND the fused
+    single-call sweeps (the full-N scratch fits at block_m=128) — both
+    asserted below, so neither the fallback nor the two-call spill can
+    silently return.  The ``bf16s`` rows store factor + streamed RHS at
+    bf16 in HBM (carries stay fp32), halving the stored-operand bytes."""
     from repro.solver import BandedSystem, plan
     n, m = 16384, 1024
     d = _rhs(n, m)
@@ -255,21 +287,37 @@ def bench_backends_streamed():
     tri = BandedSystem.tridiag(-sigma, 1 + 2 * sigma, -sigma, n=n)
     s = 0.11
     pen = BandedSystem.penta(s, -4 * s, 1 + 6 * s, -4 * s, s, n=n)
-    for kind, system in (("tridiag", tri), ("penta", pen)):
+    for kind, bw, system in (("tridiag", 3, tri), ("penta", 5, pen)):
         for backend in ("reference", "auto"):
             p = plan(system, backend=backend)
             if backend == "auto":
                 assert p.backend == "pallas", "streamed auto-select regressed"
                 block_n = p.impl.block_n
                 assert block_n is not None, "expected the streamed kernels"
-                label, derived = "pallas", f"streamed_block_n={block_n}"
+                assert p.impl.fact.meta.opt("fused") is True, \
+                    "auto no longer selects the fused single-call sweeps"
+                label = "pallas"
+                derived = f"fused_block_n={block_n}"
+                traffic = {"bandwidth": bw, "mode": "constant",
+                           "streamed": True, "fused": True}
             else:
-                label, derived = backend, "mode=constant"
+                label, derived, traffic = backend, "mode=constant", None
             t = _timeit(jax.jit(p.solve), d, reps=2)
-            _record(f"solver_{kind}_constant_{label}_streamed_N{n}_M{m}"
+            _record(f"solver_{kind}_constant_{label}_fused_streamed_N{n}_M{m}"
                     if backend == "auto" else
                     f"solver_{kind}_constant_{label}_N{n}_M{m}", t,
-                    backend=label, n=n, m=m, derived=derived)
+                    backend=label, n=n, m=m, derived=derived, traffic=traffic)
+        # mixed-precision storage on the same fused streamed point
+        p = plan(system, backend="pallas", storage_dtype="bf16")
+        assert p.impl.fact.meta.opt("storage_dtype") == "bfloat16"
+        t = _timeit(jax.jit(p.solve), d, reps=2)
+        _record(f"solver_{kind}_constant_pallas_bf16s_streamed_N{n}_M{m}", t,
+                backend="pallas", n=n, m=m,
+                derived=f"storage=bf16_fused={p.impl.fact.meta.opt('fused')}",
+                traffic={"bandwidth": bw, "mode": "constant",
+                         "streamed": True,
+                         "fused": bool(p.impl.fact.meta.opt("fused")),
+                         "storage_dtype": "bf16"})
     bench_batch_streamed()
 
 
@@ -291,14 +339,20 @@ def bench_batch_streamed():
             assert p.backend == "pallas", "batch streamed auto-select regressed"
             block_n = p.impl.block_n
             assert block_n is not None, "expected the batch streamed kernels"
+            # the batch fused working set (two full-N sweep scratches)
+            # exceeds the VMEM budget here: the tuner must SPILL to the
+            # two-call pair, not reject the solve
+            assert p.impl.fact.meta.opt("fused") is False, \
+                "batch fused spill rule regressed"
             label, derived = "pallas", f"batch_streamed_block_n={block_n}"
+            traffic = {"bandwidth": 3, "mode": "batch", "streamed": True}
         else:
-            label, derived = backend, "mode=batch"
+            label, derived, traffic = backend, "mode=batch", None
         t = _timeit(jax.jit(p.solve), d, reps=2)
         _record(f"solver_tridiag_batch_{label}_streamed_N{n}_M{m}"
                 if backend == "auto" else
                 f"solver_tridiag_batch_{label}_N{n}_M{m}", t,
-                backend=label, n=n, m=m, derived=derived)
+                backend=label, n=n, m=m, derived=derived, traffic=traffic)
     bench_sharded()
 
 
@@ -408,22 +462,24 @@ def bench_recurrence():
     for method in ("scan", "pallas"):
         t = _timeit(jax.jit(
             lambda d: linear_recurrence(p, d, method=method)), q, reps=2)
-        hbm = recurrence_hbm_traffic_bytes(1, n, m)
         _record(f"recurrence_order1_{method}_N{n}_M{m}", t, backend=method,
-                n=n, m=m, derived=f"hbm_bytes={hbm}")
+                n=n, m=m, traffic={"order": 1} if method == "pallas"
+                else None,
+                derived=f"hbm_bytes={recurrence_hbm_traffic_bytes(1, n, m)}")
         t = _timeit(jax.jit(
             lambda d: linear_recurrence2(s, t2, d, method=method)), q, reps=2)
-        hbm = recurrence_hbm_traffic_bytes(2, n, m)
         _record(f"recurrence_order2_{method}_N{n}_M{m}", t, backend=method,
-                n=n, m=m, derived=f"hbm_bytes={hbm}")
+                n=n, m=m, traffic={"order": 2} if method == "pallas"
+                else None,
+                derived=f"hbm_bytes={recurrence_hbm_traffic_bytes(2, n, m)}")
     # forced streamed kernel: same arithmetic, chunked sweep residency
     t = _timeit(jax.jit(
         lambda d: linear_recurrence(p, d, method="pallas", block_n=256)),
         q, reps=2)
-    hbm = recurrence_hbm_traffic_bytes(1, n, m, streamed=True)
     _record(f"recurrence_order1_pallas_streamed_N{n}_M{m}", t,
             backend="pallas", n=n, m=m,
-            derived=f"block_n=256_hbm_bytes={hbm}")
+            traffic={"order": 1, "streamed": True},
+            derived="block_n=256")
 
 
 # ---------------------------------------------------------------------------

@@ -17,12 +17,17 @@ solve runs:
     traffic and VMEM residency by abstract interpretation of the kernel
     builders — cross-checked against ``SweepSpec.traffic_words`` /
     ``vmem_counts`` so the roofline model can never drift from the code.
+    The fused single-call variants are swept too (one ``pallas_call``,
+    strictly fewer words than their two-call siblings, full-N scratch
+    recounted) along with the bf16 per-operand storage pricing.
   * ``gridcheck`` — enumerates every streamed ``BlockSpec`` index map over
     the 2-D split-N grid: write coverage must be a bijection, reads must
     stay in bounds, the backward chunk walk must exactly mirror the
-    forward one, and the carry scratch must be insensitive to stale state
-    at ``k == 0`` (a dropped ``reset_carry`` is a cross-lane-tile carry
-    race).
+    forward one (for the fused kernels: ascend-then-park chunk walks, a
+    park-then-descend output, and the shared-LHS mirror on ONE grid), and
+    the carry scratch must be insensitive to stale state at ``k == 0``
+    (a dropped ``reset_carry`` is a cross-lane-tile carry race; fused
+    kernels are probed again at the ``k == num_n`` descend handover).
   * ``tracecheck`` — the jit contract: every registered backend x mode
     solves under ``jax.eval_shape`` with fully traced ``Factorization``
     leaves (poisoning any concretization), ``SolveMeta`` stays hashable,
@@ -32,8 +37,9 @@ solve runs:
     host-side sites).
   * ``mutation`` — a self-test that seeds known defects (swapped
     subtraction order, off-by-one index map, dropped ``reset_carry``,
-    baked ``float(eps)``, stale traffic/VMEM constants) and asserts each
-    checker catches its class, so the linter cannot rot into a no-op.
+    baked ``float(eps)``, stale traffic/VMEM constants, a fused descend
+    map that forgets the mirror) and asserts each checker catches its
+    class, so the linter cannot rot into a no-op.
   * ``nansweep`` — a registry-driven sanitizer sweep: padded / ragged /
     dead-lane cases auto-generated for every ``REGISTRY`` spec and every
     pure backend, run under debug-NaNs (CI's nan-guard job; a new spec can

@@ -21,13 +21,15 @@ From the records two independent recounts are derived:
     buffer identity across the pass pair — matching the model's ``+ eps``
     convention.
   * ``recount_vmem_counts`` — the per-grid-step working set
-    ``(n_rhs_blocks, n_lhs_vecs, n_carry_rows)``, classified from block
-    shapes: lane-tiled blocks (minor dim == block_m, including lane-tiled
-    VMEM scratch) are RHS-class blocks, ``(rows, N-extent)`` blocks are
-    the stacked shared LHS, small ``(c, block_m)`` scratch rows are the
-    streamed sweep carries.  The streamed pair reports the elementwise
-    max over its two kernels (the forward's larger set — exactly what the
-    budget check reasons with).
+    ``(n_rhs_blocks, n_lhs_vecs, n_carry_rows, n_sweep_scratch)``,
+    classified from block shapes: lane-tiled blocks (minor dim ==
+    block_m, including lane-tiled VMEM scratch) are RHS-class blocks,
+    ``(rows, N-extent)`` blocks are the stacked shared LHS, small
+    ``(c, block_m)`` scratch rows are the streamed sweep carries, and
+    lane-tiled scratch spanning the FULL output N extent is the fused
+    kernels' resident intermediate (``SweepSpec.sweep_scratch``).  The
+    streamed pair reports the elementwise max over its two kernels (the
+    forward's larger set — exactly what the budget check reasons with).
 
 Both recounts are cross-checked in ``speccheck`` against the numbers
 ``SweepSpec`` *derives* (``traffic_words`` / ``vmem_counts``): the model
@@ -166,12 +168,19 @@ def recount_traffic_words(records: list) -> int:
 
 def recount_vmem_counts(records: list, *, block_m: int = TRACE_BLOCK_M
                         ) -> tuple:
-    """Independent ``(n_rhs_blocks, n_lhs_vecs, n_carry_rows)`` recount —
-    the elementwise max over the captured kernels' per-grid-step sets."""
-    counts = (0, 0, 0)
+    """Independent ``(n_rhs_blocks, n_lhs_vecs, n_carry_rows,
+    n_sweep_scratch)`` recount — the elementwise max over the captured
+    kernels' per-grid-step sets.
+
+    The fourth slot counts the FUSED kernels' full-N VMEM intermediates
+    (``SweepSpec.sweep_scratch``): lane-tiled scratch whose N extent
+    matches the full output sweep rather than a streamed chunk — zero for
+    every resident / two-call / recurrence kernel."""
+    counts = (0, 0, 0, 0)
     for rec in records:
-        blocks = lhs = carry = 0
+        blocks = lhs = carry = sweep = 0
         sweep_extents = set()
+        n_extents = {tuple(o.shape)[0] for o in rec.out_shapes}
         for spec_ in tuple(rec.in_specs) + tuple(rec.out_specs):
             shape = block_shape_of(spec_)
             if _is_scalar_param(shape):
@@ -185,8 +194,10 @@ def recount_vmem_counts(records: list, *, block_m: int = TRACE_BLOCK_M
             shape = tuple(scratch.shape)
             if shape[0] in sweep_extents:
                 blocks += 1          # lane-tiled full-sweep scratch
+            elif shape[-1] == block_m and shape[0] in n_extents:
+                sweep += 1           # fused full-N intermediate scratch
             else:
                 carry += shape[0]    # streamed carry rows
         counts = tuple(max(a, b)
-                       for a, b in zip(counts, (blocks, lhs, carry)))
+                       for a, b in zip(counts, (blocks, lhs, carry, sweep)))
     return counts

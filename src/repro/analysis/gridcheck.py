@@ -90,6 +90,52 @@ def _check_write_coverage(spec, rec, out: list) -> None:
                                f"blocks never written: {sorted(missing)}"))
 
 
+def _check_fused_write_coverage(spec, rec, out: list) -> None:
+    """Write coverage for the fused ascend/descend grid: the descend-phase
+    points (``k >= num_n``) must hit every output block exactly once, and
+    every ascend-phase point must PARK the output on the block the first
+    descend step overwrites — Pallas writes the bound block back on every
+    grid step, so parking anywhere else would clobber finished rows."""
+    num_n = rec.grid[-1] // 2
+    pts = rec.grid_points()
+    for idx, (ospec, oshape) in enumerate(zip(rec.out_specs,
+                                              rec.out_shapes)):
+        sub = f"{spec.name}.out[{idx}]"
+        rng = _block_range(tuple(oshape.shape), block_shape_of(ospec))
+        index_map = index_map_of(ospec)
+        seen: dict = {}
+        for pt in pts:
+            blk = tuple(index_map(*pt))
+            if any(not (0 <= b < r) for b, r in zip(blk, rng)):
+                out.append(Finding("gridcheck", sub,
+                                   f"grid point {pt} writes block {blk} "
+                                   f"outside the block range {rng} "
+                                   f"(Pallas clamps — silent corruption)"))
+                continue
+            if pt[-1] < num_n:
+                first = tuple(index_map(*pt[:-1], num_n))
+                if blk != first:
+                    out.append(Finding(
+                        "gridcheck", sub,
+                        f"ascend-phase grid point {pt} parks the output on "
+                        f"block {blk}, not on the first descend step's "
+                        f"block {first} — the write-back would clobber "
+                        f"rows the descend phase has already finished"))
+                continue
+            if blk in seen:
+                out.append(Finding("gridcheck", sub,
+                                   f"descend-phase grid points {seen[blk]} "
+                                   f"and {pt} both write block {blk} — "
+                                   f"write coverage is not a bijection"))
+            else:
+                seen[blk] = pt
+        missing = {b for b in np.ndindex(*rng)} - set(seen)
+        if missing and not any(f.subject == sub for f in out):
+            out.append(Finding("gridcheck", sub,
+                               f"blocks never written by the descend "
+                               f"phase: {sorted(missing)}"))
+
+
 def _chunk_walks(rec, arg_shapes, specs) -> list:
     """(spec_idx, walk) for each N-chunked spec: the sequence of N-chunk
     indices visited as the fast grid axis k advances at fixed j=0."""
@@ -154,6 +200,49 @@ def _check_mirror(spec, records, out: list) -> None:
     ascending = list(range(num_n))
     _check_walk(spec, records[0], "forward", ascending, out)
     _check_walk(spec, records[1], "backward", ascending[::-1], out)
+
+
+def _check_fused_walks(spec, rec, out: list) -> None:
+    """One kernel, two phases on a ``2 * num_n`` chunk axis: the chunk
+    inputs ascend ``0..num_n-1`` then park; the output parks then descends
+    ``num_n-1..0`` (the mirrored maps); the shared LHS walks the mirror
+    ``0..num_n-1..0``.  A descend map that forgets the mirror shows up
+    here as the wrong walk."""
+    from .capture import TRACE_BLOCK_M
+    num_n = rec.grid[-1] // 2
+    ks = range(2 * num_n)
+    asc_park = [min(k, num_n - 1) for k in ks]
+    park_desc = [min(2 * num_n - 1 - k, num_n - 1) for k in ks]
+    mirror = [min(k, 2 * num_n - 1 - k) for k in ks]
+    specs = tuple(rec.in_specs) + tuple(rec.out_specs)
+    n_in = len(rec.in_specs)
+    for idx, spec_ in enumerate(specs):
+        bshape = block_shape_of(spec_)
+        if bshape == (1, 1):
+            continue
+        sub = f"{spec.name}.fused[{'out' if idx >= n_in else 'in'}]"
+        index_map = index_map_of(spec_)
+        walk = [index_map(0, k) for k in ks]
+        varying = [d for d in range(len(walk[0]))
+                   if len({w[d] for w in walk}) > 1]
+        if not varying:
+            out.append(Finding("gridcheck", sub,
+                               f"operand {idx} never varies with the "
+                               f"N-chunk axis — a fused kernel streams "
+                               f"every non-scalar operand"))
+            continue
+        got = [w[varying[0]] for w in walk]
+        if idx >= n_in:
+            want, label = park_desc, "park-then-descend (mirrored output)"
+        elif bshape[-1] == TRACE_BLOCK_M:
+            want, label = asc_park, "ascend-then-park (chunk operand)"
+        else:
+            want, label = mirror, "the shared-LHS mirror 0..num_n-1..0"
+        if got != want:
+            out.append(Finding(
+                "gridcheck", sub,
+                f"operand {idx} walks N-chunks {got}, expected "
+                f"{label}: {want}"))
 
 
 def _check_recurrence_walk(spec, rec, out: list) -> None:
@@ -261,20 +350,29 @@ def _operand_data(spec, rec, rng) -> list:
 
 
 def _run_probe(rec, in_data, carry_fill, pid) -> list:
-    """Execute the kernel body once; returns the output/scratch-spill
-    arrays (everything the grid step writes besides the carry)."""
+    """Execute the kernel body once; returns everything the grid step can
+    write besides the carry: the outputs plus any non-carry (fused sweep)
+    scratch.  The carry is the LAST scratch operand by builder convention
+    and gets ``carry_fill``; other scratch (the fused kernels' full-N
+    intermediates) is seeded with a fixed nonzero value so the descend
+    phase has live coefficients to thread the carry through."""
     ins = [_MockRef(d) for d in in_data]
     outs = [_MockRef(np.zeros(block_shape_of(s), np.float32))
             for s in rec.out_specs]
-    scratch = [_MockRef(np.full(tuple(s.shape), carry_fill, np.float32))
-               for s in rec.scratch_shapes]
+    n_scr = len(rec.scratch_shapes)
+    scratch = [_MockRef(np.full(tuple(s.shape),
+                                carry_fill if i == n_scr - 1 else _SENTINEL,
+                                np.float32))
+               for i, s in enumerate(rec.scratch_shapes)]
     with _host_kernel_env(list(pid)):
         rec.kernel(*ins, *outs, *scratch)
-    return [o.arr for o in outs]
+    return [o.arr for o in outs] + [s.arr for s in scratch[:-1]]
 
 
 def _check_carry_protocol(spec, records, out: list) -> None:
-    labels = (("recurrence",) if len(records) == 1
+    fused = getattr(spec, "fused", False)
+    labels = (("fused",) if fused
+              else ("recurrence",) if len(records) == 1
               else ("forward", "backward"))
     for which, rec in zip(labels, records):
         if not rec.scratch_shapes:
@@ -285,25 +383,34 @@ def _check_carry_protocol(spec, records, out: list) -> None:
         rng = np.random.default_rng(3)
         in_data = _operand_data(spec, rec, rng)
         sub = f"{spec.name}.{which}"
-        # k == 0 (fresh lane tile): stale carry state must be DEAD
-        base = _run_probe(rec, in_data, 0.0, (1, 0))
-        stale = _run_probe(rec, in_data, _SENTINEL, (1, 0))
-        if any(not np.array_equal(b, s) for b, s in zip(base, stale)):
-            out.append(Finding(
-                "gridcheck", sub,
-                "stale carry scratch leaks into the k == 0 chunk — "
-                "reset_carry missing/broken: lane tile j+1 would start "
-                "from tile j's final sweep state (cross-lane-tile carry "
-                "race)"))
-        # k > 0 (mid-sweep): the carry must actually participate
-        base = _run_probe(rec, in_data, 0.0, (0, 1))
-        threaded = _run_probe(rec, in_data, _SENTINEL, (0, 1))
-        if all(np.array_equal(b, t) for b, t in zip(base, threaded)):
-            out.append(Finding(
-                "gridcheck", sub,
-                "carry scratch is ignored at k > 0 — the sweep state "
-                "does not thread across N-chunks (the kernel resets "
-                "unconditionally or never reads its carry)"))
+        # probe both phase starts for fused kernels: the carry resets at
+        # k == 0 (fresh lane tile) AND at k == num_n (descend handover)
+        num_n = rec.grid[-1] // 2 if fused else None
+        phases = [("k == 0", (1, 0), (0, 1))]
+        if fused:
+            phases.append((f"k == num_n ({num_n})",
+                           (0, num_n), (0, num_n + 1)))
+        for phase, reset_pid, thread_pid in phases:
+            # phase start: stale carry state must be DEAD
+            base = _run_probe(rec, in_data, 0.0, reset_pid)
+            stale = _run_probe(rec, in_data, _SENTINEL, reset_pid)
+            if any(not np.array_equal(b, s) for b, s in zip(base, stale)):
+                out.append(Finding(
+                    "gridcheck", sub,
+                    f"stale carry scratch leaks into the {phase} chunk — "
+                    f"reset_carry missing/broken: the next sweep phase "
+                    f"would start from the previous one's final carry "
+                    f"state (carry race)"))
+            # mid-phase: the carry must actually participate
+            base = _run_probe(rec, in_data, 0.0, thread_pid)
+            threaded = _run_probe(rec, in_data, _SENTINEL, thread_pid)
+            if all(np.array_equal(b, t) for b, t in zip(base, threaded)):
+                out.append(Finding(
+                    "gridcheck", sub,
+                    f"carry scratch is ignored just after {phase} — the "
+                    f"sweep state does not thread across N-chunks (the "
+                    f"kernel resets unconditionally or never reads its "
+                    f"carry)"))
 
 
 def run() -> list:
@@ -312,9 +419,13 @@ def run() -> list:
     out: list = []
     for name in sorted(engine.REGISTRY):
         spec = engine.REGISTRY[name]
+        fused = getattr(spec, "fused", False)
         records = trace_spec_calls(spec)
         for rec in records:
-            _check_write_coverage(spec, rec, out)
+            if fused:
+                _check_fused_write_coverage(spec, rec, out)
+            else:
+                _check_write_coverage(spec, rec, out)
             _check_read_bounds(spec, rec, out)
         if not spec.streamed:
             continue
@@ -326,6 +437,8 @@ def run() -> list:
             continue
         if isinstance(spec, engine.RecurrenceSpec):
             _check_recurrence_walk(spec, records[0], out)
+        elif fused:
+            _check_fused_walks(spec, records[0], out)
         else:
             _check_mirror(spec, records, out)
         _check_carry_protocol(spec, records, out)

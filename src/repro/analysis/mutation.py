@@ -36,6 +36,12 @@ of the CUDA solvers the paper benchmarks):
      at order 1 never see it and symmetric test data can mask it.
      ``speccheck``'s structural check on the gate-operand pass table
      flags the miswired lag.
+  7. **forgotten descend mirror** — the fused single-call kernels' output
+     index map using the ascend-phase walk for the descend phase too;
+     every descend grid point then clamps onto the last chunk (Pallas
+     never errors) and the back-substitution silently overwrites one
+     block ``num_n`` times.  ``gridcheck``'s fused walk/coverage checks
+     flag the missing mirror.
 """
 
 from __future__ import annotations
@@ -128,6 +134,21 @@ def _swapped_gate_lags():
 
 
 @contextlib.contextmanager
+def _forgotten_descend_mirror():
+    orig = engine.fused_chunk_spec
+
+    def bad(block_n, block_m, num_n, *, phase):
+        return orig(block_n, block_m, num_n,
+                    phase="ascend" if phase == "descend" else phase)
+
+    engine.fused_chunk_spec = bad
+    try:
+        yield
+    finally:
+        engine.fused_chunk_spec = orig
+
+
+@contextlib.contextmanager
 def _stale_traffic_constant():
     orig = engine.SweepSpec.traffic_words
 
@@ -194,6 +215,8 @@ _MUTATIONS = (
      speccheck.run, "HBM traffic drift"),
     ("swapped-gate-lags", _swapped_gate_lags,
      speccheck.run, "gate operand"),
+    ("forgotten-descend-mirror", _forgotten_descend_mirror,
+     gridcheck.run, "mirror"),
 )
 
 

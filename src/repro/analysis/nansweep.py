@@ -88,11 +88,12 @@ def _dispatch(spec, rng, n, m, block_m, block_n):
         return fn(*_recurrence_gates(spec, rng, n, m), rhs,
                   reverse=spec.reverse, block_m=block_m, block_n=bn,
                   interpret=True)
+    fused = getattr(spec, "fused", False)
     if spec.layout == "batch":
         return fn(*_batch_diags(spec, rng, n, m), rhs, block_m=block_m,
-                  block_n=bn, interpret=True)
+                  block_n=bn, fused=fused, interpret=True)
     f = _shared_factor(spec, rng, n)
-    kwargs = dict(block_m=block_m, block_n=bn, interpret=True,
+    kwargs = dict(block_m=block_m, block_n=bn, fused=fused, interpret=True,
                   transposed=spec.transposed)
     if spec.bandwidth == 5:
         kwargs["uniform"] = spec.uniform

@@ -234,6 +234,37 @@ def _check_streamed_sibling(spec, out: list) -> None:
                            "move carries, never arithmetic)"))
 
 
+def _check_fused_sibling(spec, out: list) -> None:
+    """A fused spec is its two-call sibling collapsed into one call: same
+    pass table, ONE pallas_call, and strictly fewer modelled HBM words —
+    the whole point of fusing is deleting the intermediate round trip."""
+    if not getattr(spec, "fused", False):
+        return
+    sibling = engine.REGISTRY.get(spec.unfused_name)
+    if sibling is None:
+        out.append(Finding("speccheck", spec.name,
+                           f"two-call sibling {spec.unfused_name!r} is not "
+                           f"registered (fused specs must keep their spill "
+                           f"fallback)"))
+        return
+    if spec.passes() != sibling.passes():
+        out.append(Finding("speccheck", spec.name,
+                           "fused variant runs a different pass table than "
+                           "its two-call sibling (fusing must move the "
+                           "intermediate to scratch, never arithmetic)"))
+    if spec.num_pallas_calls != 1:
+        out.append(Finding("speccheck", spec.name,
+                           f"fused spec claims {spec.num_pallas_calls} "
+                           f"pallas_calls — fusing means ONE"))
+    got = spec.traffic_words(TRACE_N, TRACE_M)
+    sib = sibling.traffic_words(TRACE_N, TRACE_M)
+    if got >= sib:
+        out.append(Finding("speccheck", spec.name,
+                           f"fused traffic ({got} words) is not below the "
+                           f"two-call sibling's ({sib}) — the fusion saves "
+                           f"nothing"))
+
+
 def _check_accounting(spec, out: list) -> None:
     """Recount traffic + VMEM from the captured builders; exact match."""
     records = trace_spec_calls(spec)
@@ -253,18 +284,45 @@ def _check_accounting(spec, out: list) -> None:
             f"claims {want} — the roofline model no longer matches the "
             f"code"))
     got_vmem = recount_vmem_counts(records)
-    want_vmem = spec.vmem_counts()
+    want_vmem = tuple(spec.vmem_counts()) + (spec.sweep_scratch(),)
     # resident kernels carry sweep state in registers, not scratch — only
-    # the first two classes are observable (and used by check_vmem)
-    compare = 3 if spec.streamed else 2
-    if got_vmem[:compare] != tuple(want_vmem)[:compare]:
+    # the first two classes are observable (and used by check_vmem);
+    # streamed pairs add the carry rows, fused kernels the full-N scratch
+    fused = getattr(spec, "fused", False)
+    compare = 4 if fused else (3 if spec.streamed else 2)
+    labels = ("blocks", "lhs_vecs", "carry_rows", "sweep_scratch")
+    if got_vmem[:compare] != want_vmem[:compare]:
         out.append(Finding(
             "speccheck", spec.name,
             f"VMEM residency drift: builders hold {got_vmem[:compare]} "
-            f"(blocks, lhs_vecs{', carry_rows' if compare == 3 else ''}) "
+            f"({', '.join(labels[:compare])}) "
             f"but SweepSpec.vmem_counts claims "
-            f"{tuple(want_vmem)[:compare]} — the budget check no longer "
+            f"{want_vmem[:compare]} — the budget check no longer "
             f"matches the code"))
+
+
+def _check_storage_pricing(spec, out: list) -> None:
+    """Mixed-precision pricing sweep: ``traffic_bytes`` must price the
+    STORED operand words at the storage itemsize and the writes /
+    intermediates at the fp32-promoted compute itemsize — the per-operand
+    itemsize split the bf16 storage path's halved-bytes claim rests on."""
+    import jax.numpy as jnp
+    n, m = TRACE_N, TRACE_M
+    f32 = spec.traffic_bytes(n, m, jnp.float32)
+    bf16 = spec.traffic_bytes(n, m, jnp.float32, jnp.dtype(jnp.bfloat16))
+    want = 2 * spec.storage_words(n, m) + 4 * spec.compute_words(n, m)
+    if bf16 != want:
+        out.append(Finding(
+            "speccheck", spec.name,
+            f"bf16-storage pricing drift: traffic_bytes says {bf16} but "
+            f"storage_words x 2 + compute_words x 4 = {want} — the "
+            f"per-operand itemsize split no longer holds"))
+    if not bf16 < f32:
+        out.append(Finding(
+            "speccheck", spec.name,
+            f"bf16 storage does not reduce modelled bytes ({bf16} vs "
+            f"{f32} at fp32) — the spec stores nothing at the storage "
+            f"dtype?"))
 
 
 def _check_sharded_traffic(spec, out: list) -> None:
@@ -297,6 +355,8 @@ def run() -> list:
             _check_structure(spec, out)
             _check_twin(spec, out)
         _check_streamed_sibling(spec, out)
+        _check_fused_sibling(spec, out)
         _check_accounting(spec, out)
+        _check_storage_pricing(spec, out)
         _check_sharded_traffic(spec, out)
     return out

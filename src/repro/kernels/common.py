@@ -24,6 +24,27 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def canonical_storage_dtype(storage_dtype):
+    """Normalise a user-facing ``storage_dtype`` knob to a jnp dtype.
+
+    ``None`` means "store at the operand dtype" (no mixed precision) and
+    passes through.  The short alias ``"bf16"`` (and ``"bfloat16"``) maps
+    to ``jnp.bfloat16`` — the storage precision of the mixed path: stored
+    factor / diagonals / RHS live at this dtype in HBM, all carries and
+    accumulation stay at least fp32 in-kernel.  Non-floating dtypes are
+    rejected (integer storage would silently quantise the factor)."""
+    if storage_dtype is None:
+        return None
+    if storage_dtype in ("bf16", "bfloat16"):
+        return jnp.dtype(jnp.bfloat16)
+    dt = jnp.dtype(storage_dtype)
+    if not jnp.issubdtype(dt, jnp.floating):
+        raise ValueError(
+            f"storage_dtype must be a floating dtype (or 'bf16'), "
+            f"got {storage_dtype!r}")
+    return dt
+
+
 def row(ref, i, width):
     """Load row i (dynamic) of a 2-D ref -> (width,) vector."""
     return ref[pl.ds(i, 1), :].reshape((width,))
@@ -143,6 +164,13 @@ def check_vmem_streamed(block_n: int, block_m: int, n_rhs_blocks: int,
 # the back-substitution kernel walks them descending (its index_map reverses
 # the chunk axis), the TPU analogue of the paper's 2-kernel pipeline.
 
+def _imin(a, b):
+    """Branch-free min that works on Python ints AND traced grid indices
+    (index maps trace; ``min``/``jnp.minimum`` would concretise or force a
+    jnp dependency inside the map)."""
+    return (a + b - abs(a - b)) // 2
+
+
 def chunk_spec(block_n: int, block_m: int, num_n: int, *,
                reverse: bool = False):
     """BlockSpec for an (N, M) operand chunked to (block_n, block_m) on the
@@ -162,6 +190,80 @@ def chunk_lhs_spec(rows: int, block_n: int, num_n: int, *,
         return pl.BlockSpec((rows, block_n),
                             lambda j, k: (0, num_n - 1 - k))
     return pl.BlockSpec((rows, block_n), lambda j, k: (0, k))
+
+
+# -- fused single-call streamed grid ----------------------------------------
+#
+# The fused streamed kernels run BOTH sweep passes in one ``pallas_call`` on
+# a grid ``(M/block_m, 2*N/block_n)`` whose N-chunk walk ASCENDS for the
+# first num_n steps (forward pass) and DESCENDS for the last num_n steps
+# (back substitution), with the intermediate (d_hat / g) held in a full-N
+# VMEM scratch instead of round-tripping through HBM between two kernels.
+# The index maps below clamp each operand to the phase that actually uses
+# it, so every HBM block is fetched exactly once per phase that needs it
+# (the clamped steps revisit the previous block, which Pallas keeps in VMEM
+# — no refetch, and the recount in analysis/capture counts distinct blocks).
+
+def fused_chunk_spec(block_n: int, block_m: int, num_n: int, *, phase: str):
+    """BlockSpec for an (N, M) operand on the fused ascend/descend grid.
+
+    ``phase="ascend"`` (forward-pass inputs): chunk ``min(k, num_n-1)`` —
+    walks 0..num_n-1, then parks on the last chunk through the descend
+    steps (already in VMEM; the descend phase never reads it).
+    ``phase="descend"`` (back-substitution output): chunk
+    ``min(2*num_n-1-k, num_n-1)`` — parks on chunk num_n-1 through the
+    ascend steps (those writes are dead: the first descend step rewrites
+    the same block), then walks num_n-1..0."""
+    if phase == "ascend":
+        return pl.BlockSpec((block_n, block_m),
+                            lambda j, k: (_imin(k, num_n - 1), j))
+    if phase != "descend":
+        raise ValueError(f"phase must be 'ascend' or 'descend', got {phase!r}")
+    return pl.BlockSpec((block_n, block_m),
+                        lambda j, k: (_imin(2 * num_n - 1 - k, num_n - 1), j))
+
+
+def fused_lhs_spec(rows: int, block_n: int, num_n: int):
+    """BlockSpec for the stacked (rows, N) shared LHS on the fused grid:
+    the descend phase MIRRORS the ascend walk (``min(k, 2*num_n-1-k)``
+    is 0..num_n-1 then num_n-1..0), so the single stored LHS copy streams
+    through VMEM exactly once per phase with no refetch at the turn."""
+    return pl.BlockSpec((rows, block_n),
+                        lambda j, k: (0, _imin(k, 2 * num_n - 1 - k)))
+
+
+def fused_vmem_working_set(n: int, block_n: int, block_m: int,
+                           n_chunk_blocks: int, n_lhs_vecs: int,
+                           n_carry: int, n_sweep_blocks: int,
+                           itemsize: int = 4,
+                           compute_itemsize: int | None = None) -> int:
+    """Bytes of VMEM a FUSED streamed grid step holds: the chunked
+    operand/out blocks + chunked LHS (at the storage itemsize) + the carry
+    rows and the full-N intermediate scratch that replaces the two-call
+    pair's HBM round trip (at the fp32 compute itemsize)."""
+    if compute_itemsize is None:
+        compute_itemsize = itemsize
+    return ((n_chunk_blocks * block_n * block_m + n_lhs_vecs * block_n)
+            * itemsize
+            + (n_carry * block_m + n_sweep_blocks * n * block_m)
+            * compute_itemsize)
+
+
+def check_vmem_fused(n: int, block_n: int, block_m: int, n_chunk_blocks: int,
+                     n_lhs_vecs: int, n_carry: int, n_sweep_blocks: int,
+                     itemsize: int = 4,
+                     compute_itemsize: int | None = None) -> None:
+    ws = fused_vmem_working_set(n, block_n, block_m, n_chunk_blocks,
+                                n_lhs_vecs, n_carry, n_sweep_blocks,
+                                itemsize=itemsize,
+                                compute_itemsize=compute_itemsize)
+    if ws > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"fused streamed working set {ws/2**20:.1f} MiB exceeds VMEM "
+            f"budget ({VMEM_BUDGET_BYTES/2**20:.0f} MiB): N={n}, "
+            f"BLOCK_N={block_n}, BLOCK_M={block_m}. The full-N intermediate "
+            f"scratch does not fit — spill to the two-call streamed pair "
+            f"(fused=False) or reduce block_m.")
 
 
 def block_shape_of(block_spec) -> tuple:

@@ -60,8 +60,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import chunk_lhs_spec, chunk_spec, reset_carry, row, scalar, \
-    store_row
+from .common import chunk_lhs_spec, chunk_spec, fused_chunk_spec, \
+    fused_lhs_spec, _imin, reset_carry, row, scalar, store_row
 
 # Sentinel coefficient source: the uniform-mode eps value, which rides in a
 # (1, 1) ARRAY operand (never a Python float baked into the kernel closure,
@@ -147,6 +147,7 @@ class SweepSpec:
     transposed: bool = False  # solve A^T x = rhs from the same factor
     streamed: bool = False    # HBM-streamed split-N vs VMEM-resident
     uniform: bool = False     # penta shared only: eps as a (1, 1) operand
+    fused: bool = False       # streamed only: both passes in ONE kernel
 
     def __post_init__(self):
         if self.bandwidth not in (3, 5):
@@ -161,6 +162,11 @@ class SweepSpec:
                 "no transposed batch kernels: rolling the per-lane diagonals "
                 "turns A^T into another batch system, so the forward batch "
                 "kernels serve the adjoint (repro.solver.pallas)")
+        if self.fused and not self.streamed:
+            raise ValueError(
+                "fused is a streamed concept: the resident kernels already "
+                "run both passes in one pallas_call; fused=True fuses the "
+                "STREAMED forward/backward pair onto one ascend/descend grid")
 
     # -- derived structure --------------------------------------------------
 
@@ -205,6 +211,8 @@ class SweepSpec:
         name = f"{base}_{self.mode}"
         if self.streamed:
             name += "_streamed"
+        if self.fused:
+            name += "_fused"
         if self.transposed:
             name += "_t"
         return name
@@ -236,7 +244,13 @@ class SweepSpec:
     @property
     def resident_name(self) -> str:
         """Name of the VMEM-resident sibling (self when not streamed)."""
-        return dataclasses.replace(self, streamed=False).name
+        return dataclasses.replace(self, streamed=False, fused=False).name
+
+    @property
+    def unfused_name(self) -> str:
+        """Name of the two-call streamed sibling (self when not fused) —
+        the spill target when the fused working set exceeds the budget."""
+        return dataclasses.replace(self, fused=False).name
 
     def twin_name(self) -> str | None:
         """Name of the transposed twin spec (None for batch layout, whose
@@ -260,22 +274,53 @@ class SweepSpec:
 
     # -- derived accounting (no hand-kept tables) ---------------------------
 
+    def storage_words(self, n: int, m: int) -> int:
+        """HBM<->VMEM words one solve READS from stored operands — the
+        factor/diagonals, the (streamed) RHS, and the eps parameter.
+        These are the words a ``storage_dtype`` override (bf16 in HBM,
+        fp32 in-kernel) shrinks; everything written moves at the compute
+        dtype and is counted by ``compute_words``."""
+        if self.layout == "batch":
+            # diagonals + rhs in.
+            return (self.bandwidth + 1) * n * m
+        # rhs in; the two-call streamed pair re-reads the LHS for its
+        # backward kernel, the fused/resident variants read it once.
+        lhs_passes = 1 if (self.fused or not self.streamed) else 2
+        eps = 1 if self.uniform else 0
+        return n * m + lhs_passes * self.lhs_rows * n + eps
+
+    def compute_words(self, n: int, m: int) -> int:
+        """HBM<->VMEM words moved at the COMPUTE dtype (fp32-accumulated,
+        regardless of ``storage_dtype``): the final x, plus — for the
+        two-call streamed pair only — the intermediate (and, for batch,
+        the spilled factor coefficients) round-tripped through HBM between
+        the forward and backward kernels.  Resident and fused variants
+        keep d_hat/g in VMEM, so their only compute-dtype stream is x."""
+        if not self.streamed or self.fused:
+            return n * m
+        if self.layout == "batch":
+            # x out + fwd writes intermediate + n_coefs spills which the
+            # bwd kernel reads back.
+            return (1 + 2 * (1 + self.n_coefs)) * n * m
+        # x out + the d_hat/g round trip.
+        return 3 * n * m
+
     def traffic_words(self, n: int, m: int) -> int:
         """HBM<->VMEM words one solve of an (n, m) RHS moves — the roofline
         memory term the paper's speed-up rests on, derived from the spec's
         stream structure (passes x {operands in, results out, LHS rows})."""
-        if self.layout == "batch":
-            if self.streamed:
-                # fwd: k+1 in, 1+order out (intermediate + spilled coefs);
-                # bwd: 1+order in, 1 out.
-                return (self.bandwidth + 2 * self.order + 4) * n * m
-            return (self.bandwidth + 2) * n * m
-        passes = 2 if self.streamed else 1
-        eps = 1 if self.uniform else 0
-        return passes * (2 * n * m + self.lhs_rows * n) + eps
+        return self.storage_words(n, m) + self.compute_words(n, m)
 
-    def traffic_bytes(self, n: int, m: int, dtype=jnp.float32) -> int:
-        return self.traffic_words(n, m) * jnp.dtype(dtype).itemsize
+    def traffic_bytes(self, n: int, m: int, dtype=jnp.float32,
+                      storage_dtype=None) -> int:
+        """Bytes moved, itemized PER OPERAND CLASS: stored operands move at
+        ``storage_dtype`` (defaults to ``dtype``), intermediates at the
+        compute dtype — so the bf16-storage path halves the storage term
+        while the spilled intermediates (if any) stay full width."""
+        s_item = jnp.dtype(storage_dtype or dtype).itemsize
+        c_item = jnp.dtype(dtype).itemsize
+        return (self.storage_words(n, m) * s_item
+                + self.compute_words(n, m) * c_item)
 
     def sharded_traffic_words(self, n: int, m: int, n_shards: int) -> int:
         """PER-DEVICE HBM<->VMEM words when the M axis is sharded over
@@ -293,21 +338,36 @@ class SweepSpec:
 
     def vmem_counts(self) -> tuple:
         """(n_rhs_blocks, n_lhs_vecs, n_carry_rows) for the VMEM budget
-        checks (``common.check_vmem`` / ``check_vmem_streamed``).  For the
-        streamed batch pair this is the FORWARD kernel's (larger) chunk
-        working set: diagonals + rhs in, intermediate + spilled coefs out."""
+        checks (``common.check_vmem`` / ``check_vmem_streamed`` /
+        ``check_vmem_fused``).  For the streamed batch pair this is the
+        FORWARD kernel's (larger) chunk working set: diagonals + rhs in,
+        intermediate + spilled coefs out.  The fused variants hold the
+        intermediate/spills in full-N VMEM scratch instead (counted
+        separately by ``sweep_scratch``), so their chunk-block count drops
+        back to operands in + x out."""
         if self.layout == "shared":
             return 2, self.lhs_rows, self.order
+        if self.fused:
+            return self.bandwidth + 2, 0, self.carry_rows
         blocks = self.bandwidth + 1 + 1 + self.n_coefs
         return blocks, 0, self.carry_rows
+
+    def sweep_scratch(self) -> int:
+        """Full-length (N, BLOCK_M) VMEM scratch arrays a fused kernel
+        keeps resident across its ascend/descend walk — the intermediate
+        d_hat/g (plus, for batch layout, the factor coefficients) that the
+        two-call pair would spill to HBM.  0 for every non-fused spec."""
+        if not self.fused:
+            return 0
+        return 1 + self.n_coefs
 
     @property
     def num_pallas_calls(self) -> int:
         """``pl.pallas_call`` count one solve of this spec emits — the
         accounting invariant the capture layer cross-checks.  Streamed
-        sweeps are a forward/backward kernel PAIR; resident sweeps fuse
-        both passes into one kernel."""
-        return 2 if self.streamed else 1
+        sweeps are a forward/backward kernel PAIR unless fused; resident
+        and fused sweeps run both passes in one kernel."""
+        return 2 if (self.streamed and not self.fused) else 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -330,6 +390,10 @@ class RecurrenceSpec:
     order: int                # 1 | 2 carry lags
     reverse: bool = False     # walk the sweep axis descending
     streamed: bool = False    # HBM-streamed split-N vs VMEM-resident
+
+    #: a single-pass recurrence has nothing to fuse — class attribute so
+    #: the analysis layers can branch on ``spec.fused`` uniformly.
+    fused = False
 
     def __post_init__(self):
         if self.order not in (1, 2):
@@ -384,15 +448,29 @@ class RecurrenceSpec:
 
     # -- derived accounting (no hand-kept tables) ---------------------------
 
+    def storage_words(self, n: int, m: int) -> int:
+        """Words read from stored operands: ``order`` gate arrays + the
+        additive operand (no shared LHS, no eps)."""
+        return (self.order + 1) * n * m
+
+    def compute_words(self, n: int, m: int) -> int:
+        """Words moved at the compute dtype: h out (a single pass has no
+        inter-kernel intermediate to round-trip)."""
+        return n * m
+
     def traffic_words(self, n: int, m: int) -> int:
         """HBM<->VMEM words one solve moves: ``order`` gate operands + the
         additive operand in, h out — identical for resident and streamed
         (a single pass streams every chunk exactly once; nothing is
         revisited, unlike the two-pass sweeps)."""
-        return (self.order + 2) * n * m
+        return self.storage_words(n, m) + self.compute_words(n, m)
 
-    def traffic_bytes(self, n: int, m: int, dtype=jnp.float32) -> int:
-        return self.traffic_words(n, m) * jnp.dtype(dtype).itemsize
+    def traffic_bytes(self, n: int, m: int, dtype=jnp.float32,
+                      storage_dtype=None) -> int:
+        s_item = jnp.dtype(storage_dtype or dtype).itemsize
+        c_item = jnp.dtype(dtype).itemsize
+        return (self.storage_words(n, m) * s_item
+                + self.compute_words(n, m) * c_item)
 
     def sharded_traffic_words(self, n: int, m: int, n_shards: int) -> int:
         """PER-DEVICE words with M sharded: every stream is lane-tiled
@@ -407,6 +485,10 @@ class RecurrenceSpec:
         rows thread the streamed chunks."""
         return self.order + 2, 0, self.order
 
+    def sweep_scratch(self) -> int:
+        """No fused variant, so never any full-N VMEM sweep scratch."""
+        return 0
+
     @property
     def num_pallas_calls(self) -> int:
         """Always 1: a recurrence solve is a single pass, so even the
@@ -418,14 +500,17 @@ def _all_specs() -> tuple:
     specs = []
     for bw in (3, 5):
         for transposed in (False, True):
-            for streamed in (False, True):
+            for streamed, fused in ((False, False), (True, False),
+                                    (True, True)):
                 specs.append(SweepSpec(bw, "shared", transposed=transposed,
-                                       streamed=streamed))
+                                       streamed=streamed, fused=fused))
                 if bw == 5:
                     specs.append(SweepSpec(bw, "shared", transposed=transposed,
-                                           streamed=streamed, uniform=True))
-        for streamed in (False, True):
-            specs.append(SweepSpec(bw, "batch", streamed=streamed))
+                                           streamed=streamed, fused=fused,
+                                           uniform=True))
+        for streamed, fused in ((False, False), (True, False), (True, True)):
+            specs.append(SweepSpec(bw, "batch", streamed=streamed,
+                                   fused=fused))
     for order in (1, 2):
         for reverse in (False, True):
             for streamed in (False, True):
@@ -440,7 +525,7 @@ REGISTRY: dict = {s.name: s for s in _all_specs()}
 
 
 def find_spec(bandwidth: int, mode: str, *, streamed: bool = False,
-              transposed: bool = False) -> SweepSpec:
+              transposed: bool = False, fused: bool = False) -> SweepSpec:
     """Look up the spec serving (bandwidth, storage mode) — the tridiag
     ``uniform`` mode shares the constant kernel (no eps vector to drop).
 
@@ -462,12 +547,20 @@ def find_spec(bandwidth: int, mode: str, *, streamed: bool = False,
             "system and reuses the FORWARD batch kernels "
             "(repro.solver.pallas.transpose_solve_stored) — call with "
             "transposed=False on the rolled diagonals")
+    if fused and not streamed:
+        raise ValueError(
+            "fused=True is a streamed refinement (one ascend/descend "
+            "pallas_call instead of the forward/backward pair); the "
+            "resident kernels are already single-call — pass streamed=True "
+            "or drop fused")
     if bandwidth == 3 and mode == "uniform":
         mode = "constant"
     base = "thomas" if bandwidth == 3 else "penta"
     name = f"{base}_{mode}"
     if streamed:
         name += "_streamed"
+    if fused:
+        name += "_fused"
     if transposed:
         name += "_t"
     try:
@@ -546,39 +639,58 @@ def _shared_coeff(lhs_ref, eps_ref):
     return at
 
 
-def _lane_coeff(refs):
+def _shift(off):
+    """Index shifter: identity for the (static) zero offset so non-fused
+    traces stay instruction-identical; otherwise adds the (possibly
+    traced) base row of a fused kernel's full-N VMEM scratch."""
+    if isinstance(off, int) and off == 0:
+        return lambda i: i
+    return lambda i: off + i
+
+
+def _lane_coeff(refs, off=0):
     """Coefficient accessor for the batch layout: a (BLOCK_M,) vector per
-    sweep row, read from per-lane (N, BLOCK_M) refs."""
+    sweep row, read from per-lane (N, BLOCK_M) refs.  ``off`` rebases the
+    row index when the refs are a fused kernel's full-N scratch but the
+    pass walks one BLOCK_N chunk of it."""
+    at_row = _shift(off)
+
     def at(src, i):
-        return row(refs[src], i, refs[src].shape[1])
+        return row(refs[src], at_row(i), refs[src].shape[1])
     return at
 
 
 def _solve_pass(coeff_at, in_ref, out_ref, init, *, pspec: PassSpec,
-                order: int, length: int, reverse: bool, unroll: int):
+                order: int, length: int, reverse: bool, unroll: int,
+                in_off=0, out_off=0):
     """Run one sweep pass; returns the final carry tuple.
 
     ``init`` is the carry tuple entering the pass (zeros, or the VMEM
     scratch rows threading a streamed sweep across N-chunks).  ``in_ref``
     and ``out_ref`` may alias (the resident kernels back-substitute in
-    place over the intermediate they just wrote)."""
+    place over the intermediate they just wrote).  ``in_off``/``out_off``
+    rebase the row index into refs that are LONGER than the pass (a fused
+    kernel's full-N intermediate scratch vs its BLOCK_N chunk walk);
+    coefficient rows are always chunk-local (``coeff_at`` carries its own
+    base when needed)."""
     m = in_ref.shape[1]
+    in_at, out_at = _shift(in_off), _shift(out_off)
 
     def body(t, carries):
         i = length - 1 - t if reverse else t
-        acc = row(in_ref, i, m)
+        acc = row(in_ref, in_at(i), m)
         for src, lag in pspec.terms:
             acc = acc - coeff_at(src, i) * carries[lag - 1]
         if pspec.scale is not None:
             acc = acc * coeff_at(pspec.scale, i)
-        store_row(out_ref, i, acc)
+        store_row(out_ref, out_at(i), acc)
         return (acc,) + carries[:order - 1]
 
     return jax.lax.fori_loop(0, length, body, tuple(init), unroll=unroll)
 
 
 def _factor_pass(diag_at, rhs_ref, coef_store, out_ref, init, *, order: int,
-                 length: int, unroll: int):
+                 length: int, unroll: int, out_off=0):
     """Fused factorisation + forward sweep (batch layout: cuThomasBatch /
     cuPentBatch semantics — the per-lane LHS is re-factored every solve).
 
@@ -587,6 +699,7 @@ def _factor_pass(diag_at, rhs_ref, coef_store, out_ref, init, *, order: int,
     no boundary special-casing — which is also what makes the streamed
     chunking and the identity sweep-padding exact."""
     m = rhs_ref.shape[1]
+    out_at = _shift(out_off)
 
     if order == 1:
         def body(i, carry):
@@ -596,7 +709,7 @@ def _factor_pass(diag_at, rhs_ref, coef_store, out_ref, init, *, order: int,
             chat = diag_at(2, i) * inv
             coef_store(0, i, chat)
             dh = (row(rhs_ref, i, m) - a_i * dh_p) * inv
-            store_row(out_ref, i, dh)
+            store_row(out_ref, out_at(i), dh)
             return chat, dh
     else:
         def body(i, carry):
@@ -610,10 +723,34 @@ def _factor_pass(diag_at, rhs_ref, coef_store, out_ref, init, *, order: int,
             coef_store(0, i, gamma_i)
             coef_store(1, i, delta_i)
             g_i = (row(rhs_ref, i, m) - a_i * gg2 - beta_i * gg1) * inv
-            store_row(out_ref, i, g_i)
+            store_row(out_ref, out_at(i), g_i)
             return gamma_i, g1, delta_i, dl1, g_i, gg1
 
     return jax.lax.fori_loop(0, length, body, tuple(init), unroll=unroll)
+
+
+def _compute_dtype(dtype):
+    """In-kernel accumulation dtype: carries, intermediates, and the final
+    x stay at least fp32 even when the stored operands arrive bf16 (the
+    mixed-precision storage path — cast up on load, never accumulate in
+    bf16).  Identity for fp32/fp64 inputs, preserving bit-exactness."""
+    return jnp.promote_types(dtype, jnp.float32)
+
+
+def _compiler_params(prefetch: bool, interpret: bool) -> dict:
+    """Mosaic knobs for the streamed/fused 2-D grids.  ``prefetch=True``
+    marks the lane axis ``parallel`` (the N-chunk axis stays ``arbitrary``
+    — its carry scratch is sequential), letting the pipeline stage the
+    next chunk's operand DMA into the second VMEM buffer while the
+    current chunk computes.  Interpret mode (CPU CI) takes no compiler
+    params at all — the interpreter executes grid steps serially, so this
+    is also the interpret-safe fallback."""
+    if interpret:
+        return {}
+    sem = ("parallel", "arbitrary") if prefetch else ("arbitrary",
+                                                      "arbitrary")
+    return {"compiler_params":
+            pltpu.TPUCompilerParams(dimension_semantics=sem)}
 
 
 # ---------------------------------------------------------------------------
@@ -630,7 +767,7 @@ def _shared_resident_kernel(*refs, spec: SweepSpec, n: int, unroll: int):
     fwd, bwd = spec.passes()
     at = _shared_coeff(lhs_ref, eps_ref)
     m = in_ref.shape[1]
-    zeros = (jnp.zeros((m,), in_ref.dtype),) * spec.order
+    zeros = (jnp.zeros((m,), x_ref.dtype),) * spec.order
     _solve_pass(at, in_ref, x_ref, zeros, pspec=fwd, order=spec.order,
                 length=n, reverse=False, unroll=unroll)
     _solve_pass(at, x_ref, x_ref, zeros, pspec=bwd, order=spec.order,
@@ -655,6 +792,48 @@ def _shared_streamed_kernel(*refs, pspec: PassSpec, order: int, block_n: int,
         store_row(carry_ref, j, final[j])
 
 
+def _shared_fused_kernel(*refs, spec: SweepSpec, block_n: int, num_n: int,
+                         unroll: int):
+    """Both streamed passes in ONE kernel on the ascend/descend grid:
+    steps k < num_n run the forward pass over ascending chunks, writing
+    the intermediate (d_hat / g) into the full-N VMEM scratch ``mid_ref``;
+    steps k >= num_n run back substitution over descending chunks, reading
+    ``mid_ref`` back — the HBM round trip of the two-call pair, eliminated.
+    The carry scratch resets at k == 0 AND k == num_n (``k % num_n``): each
+    phase starts from the zero-carry boundary protocol."""
+    if spec.uniform:
+        eps_ref, lhs_ref, in_ref, x_ref, mid_ref, carry_ref = refs
+    else:
+        (lhs_ref, in_ref, x_ref, mid_ref, carry_ref), eps_ref = refs, None
+    fwd, bwd = spec.passes()
+    at = _shared_coeff(lhs_ref, eps_ref)
+    m = in_ref.shape[1]
+    k = pl.program_id(1)
+    reset_carry(carry_ref, k % num_n)
+    init = tuple(row(carry_ref, j, m) for j in range(spec.order))
+    # Base rows into the full-N scratch: the chunk this step ascends into /
+    # descends from (clamped like the index maps, so the not-taken branch
+    # never addresses out of range).
+    off = _imin(k, num_n - 1) * block_n
+    doff = _imin(2 * num_n - 1 - k, num_n - 1) * block_n
+
+    @pl.when(k < num_n)
+    def _ascend():
+        final = _solve_pass(at, in_ref, mid_ref, init, pspec=fwd,
+                            order=spec.order, length=block_n, reverse=False,
+                            unroll=unroll, out_off=off)
+        for j in range(spec.order):
+            store_row(carry_ref, j, final[j])
+
+    @pl.when(k >= num_n)
+    def _descend():
+        final = _solve_pass(at, mid_ref, x_ref, init, pspec=bwd,
+                            order=spec.order, length=block_n, reverse=True,
+                            unroll=unroll, in_off=doff)
+        for j in range(spec.order):
+            store_row(carry_ref, j, final[j])
+
+
 @functools.lru_cache(maxsize=None)
 def shared_solver(spec: SweepSpec):
     """Compile ``spec`` (shared layout) into its jitted pallas entry point:
@@ -672,6 +851,7 @@ def shared_solver(spec: SweepSpec):
         def solver(lhs, rhs, *, block_m=128, unroll=1, interpret=True,
                    eps=None):
             n, m = rhs.shape
+            cdt = _compute_dtype(rhs.dtype)
             in_specs = [pl.BlockSpec((spec.lhs_rows, n), lambda j: (0, 0)),
                         _col_spec(n, block_m)]
             args = [lhs, rhs]
@@ -684,19 +864,53 @@ def shared_solver(spec: SweepSpec):
                 grid=(m // block_m,),
                 in_specs=in_specs,
                 out_specs=_col_spec(n, block_m),
-                out_shape=jax.ShapeDtypeStruct((n, m), rhs.dtype),
+                out_shape=jax.ShapeDtypeStruct((n, m), cdt),
                 interpret=interpret,
             )(*args)
         return solver
 
+    if spec.fused:
+        @functools.partial(jax.jit,
+                           static_argnames=("block_m", "block_n", "unroll",
+                                            "interpret", "prefetch"))
+        def solver(lhs, rhs, *, block_m=128, block_n=512, unroll=1,
+                   interpret=True, eps=None, prefetch=False):
+            n, m = rhs.shape
+            cdt = _compute_dtype(rhs.dtype)
+            num_n = n // block_n
+            in_specs = [fused_lhs_spec(spec.lhs_rows, block_n, num_n),
+                        fused_chunk_spec(block_n, block_m, num_n,
+                                         phase="ascend")]
+            args = [lhs, rhs]
+            if spec.uniform:
+                in_specs.insert(0, pl.BlockSpec((1, 1), lambda j, k: (0, 0)))
+                args.insert(0, eps)
+            return pl.pallas_call(
+                functools.partial(_shared_fused_kernel, spec=spec,
+                                  block_n=block_n, num_n=num_n,
+                                  unroll=unroll),
+                grid=(m // block_m, 2 * num_n),
+                in_specs=in_specs,
+                out_specs=fused_chunk_spec(block_n, block_m, num_n,
+                                           phase="descend"),
+                out_shape=jax.ShapeDtypeStruct((n, m), cdt),
+                scratch_shapes=[pltpu.VMEM((n, block_m), cdt),
+                                pltpu.VMEM((spec.order, block_m), cdt)],
+                interpret=interpret,
+                **_compiler_params(prefetch, interpret),
+            )(*args)
+        return solver
+
     @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
-                                                 "unroll", "interpret"))
+                                                 "unroll", "interpret",
+                                                 "prefetch"))
     def solver(lhs, rhs, *, block_m=128, block_n=512, unroll=1,
-               interpret=True, eps=None):
+               interpret=True, eps=None, prefetch=False):
         n, m = rhs.shape
+        cdt = _compute_dtype(rhs.dtype)
         num_n = n // block_n
         grid = (m // block_m, num_n)
-        carry = [pltpu.VMEM((spec.order, block_m), rhs.dtype)]
+        carry = [pltpu.VMEM((spec.order, block_m), cdt)]
         fwd, bwd = spec.passes()
 
         def one_pass(pspec, reverse, operand):
@@ -715,9 +929,10 @@ def shared_solver(spec: SweepSpec):
                 grid=grid,
                 in_specs=in_specs,
                 out_specs=chunk_spec(block_n, block_m, num_n, reverse=reverse),
-                out_shape=jax.ShapeDtypeStruct((n, m), rhs.dtype),
+                out_shape=jax.ShapeDtypeStruct((n, m), cdt),
                 scratch_shapes=carry,
                 interpret=interpret,
+                **_compiler_params(prefetch, interpret),
             )(*args)
 
         mid = one_pass(fwd, False, rhs)           # ascending: d_hat / g
@@ -734,7 +949,7 @@ def _batch_resident_kernel(*refs, spec: SweepSpec, n: int, unroll: int):
     diag_refs, rhs_ref, x_ref = refs[:nd], refs[nd], refs[nd + 1]
     coef_refs = refs[nd + 2:]                     # VMEM scratch
     m = rhs_ref.shape[1]
-    zeros = jnp.zeros((m,), rhs_ref.dtype)
+    zeros = jnp.zeros((m,), x_ref.dtype)
     _factor_pass(_lane_coeff(diag_refs), rhs_ref,
                  lambda r, i, v: store_row(coef_refs[r], i, v),
                  x_ref, (zeros,) * spec.carry_rows, order=spec.order,
@@ -784,6 +999,48 @@ def _batch_streamed_bwd_kernel(*refs, spec: SweepSpec, block_n: int,
         store_row(carry_ref, j, final[j])
 
 
+def _batch_fused_kernel(*refs, spec: SweepSpec, block_n: int, num_n: int,
+                        unroll: int):
+    """Fused factorisation + back substitution in ONE kernel on the
+    ascend/descend grid: the intermediate AND the factor coefficients
+    (c_hat / gamma+delta) live in full-N VMEM scratch instead of spilling
+    to HBM between the two-call pair's kernels.  The carry scratch resets
+    at k == 0 AND k == num_n (``k % num_n``) — the descend phase's
+    (smaller) back-substitution carry reuses the leading rows."""
+    nd = spec.bandwidth
+    diag_refs, rhs_ref, x_ref = refs[:nd], refs[nd], refs[nd + 1]
+    mid_ref = refs[nd + 2]
+    coef_refs = refs[nd + 3:nd + 3 + spec.n_coefs]   # full-N VMEM scratch
+    carry_ref = refs[-1]
+    m = rhs_ref.shape[1]
+    k = pl.program_id(1)
+    reset_carry(carry_ref, k % num_n)
+    off = _imin(k, num_n - 1) * block_n
+    doff = _imin(2 * num_n - 1 - k, num_n - 1) * block_n
+
+    @pl.when(k < num_n)
+    def _ascend():
+        init = tuple(row(carry_ref, j, m) for j in range(spec.carry_rows))
+        final = _factor_pass(
+            _lane_coeff(diag_refs), rhs_ref,
+            lambda r, i, v: store_row(coef_refs[r], off + i, v),
+            mid_ref, init, order=spec.order, length=block_n,
+            unroll=unroll, out_off=off)
+        for j in range(spec.carry_rows):
+            store_row(carry_ref, j, final[j])
+
+    @pl.when(k >= num_n)
+    def _descend():
+        _, bwd = spec.passes()
+        init = tuple(row(carry_ref, j, m) for j in range(spec.order))
+        final = _solve_pass(_lane_coeff(coef_refs, off=doff), mid_ref, x_ref,
+                            init, pspec=bwd, order=spec.order,
+                            length=block_n, reverse=True, unroll=unroll,
+                            in_off=doff)
+        for j in range(spec.order):
+            store_row(carry_ref, j, final[j])
+
+
 @functools.lru_cache(maxsize=None)
 def batch_solver(spec: SweepSpec):
     """Compile ``spec`` (batch layout) into its jitted pallas entry point:
@@ -799,6 +1056,7 @@ def batch_solver(spec: SweepSpec):
                            static_argnames=("block_m", "unroll", "interpret"))
         def solver(*args, block_m=128, unroll=1, interpret=True):
             n, m = args[-1].shape
+            cdt = _compute_dtype(args[-1].dtype)
             sp = _col_spec(n, block_m)
             return pl.pallas_call(
                 functools.partial(_batch_resident_kernel, spec=spec, n=n,
@@ -806,22 +1064,52 @@ def batch_solver(spec: SweepSpec):
                 grid=(m // block_m,),
                 in_specs=[sp] * (spec.bandwidth + 1),
                 out_specs=sp,
-                out_shape=jax.ShapeDtypeStruct((n, m), args[-1].dtype),
-                scratch_shapes=[pltpu.VMEM((n, block_m), args[-1].dtype)
+                out_shape=jax.ShapeDtypeStruct((n, m), cdt),
+                scratch_shapes=[pltpu.VMEM((n, block_m), cdt)
                                 for _ in range(spec.n_coefs)],
                 interpret=interpret,
             )(*args)
         return solver
 
+    if spec.fused:
+        @functools.partial(jax.jit,
+                           static_argnames=("block_m", "block_n", "unroll",
+                                            "interpret", "prefetch"))
+        def solver(*args, block_m=128, block_n=512, unroll=1, interpret=True,
+                   prefetch=False):
+            n, m = args[-1].shape
+            cdt = _compute_dtype(args[-1].dtype)
+            num_n = n // block_n
+            asc = fused_chunk_spec(block_n, block_m, num_n, phase="ascend")
+            return pl.pallas_call(
+                functools.partial(_batch_fused_kernel, spec=spec,
+                                  block_n=block_n, num_n=num_n,
+                                  unroll=unroll),
+                grid=(m // block_m, 2 * num_n),
+                in_specs=[asc] * (spec.bandwidth + 1),
+                out_specs=fused_chunk_spec(block_n, block_m, num_n,
+                                           phase="descend"),
+                out_shape=jax.ShapeDtypeStruct((n, m), cdt),
+                scratch_shapes=[pltpu.VMEM((n, block_m), cdt)
+                                for _ in range(1 + spec.n_coefs)]
+                               + [pltpu.VMEM((spec.carry_rows, block_m),
+                                             cdt)],
+                interpret=interpret,
+                **_compiler_params(prefetch, interpret),
+            )(*args)
+        return solver
+
     @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
-                                                 "unroll", "interpret"))
-    def solver(*args, block_m=128, block_n=512, unroll=1, interpret=True):
+                                                 "unroll", "interpret",
+                                                 "prefetch"))
+    def solver(*args, block_m=128, block_n=512, unroll=1, interpret=True,
+               prefetch=False):
         n, m = args[-1].shape
-        dtype = args[-1].dtype
+        cdt = _compute_dtype(args[-1].dtype)
         num_n = n // block_n
         grid = (m // block_m, num_n)
         csp = chunk_spec(block_n, block_m, num_n)
-        shape = jax.ShapeDtypeStruct((n, m), dtype)
+        shape = jax.ShapeDtypeStruct((n, m), cdt)
 
         outs = pl.pallas_call(
             functools.partial(_batch_streamed_fwd_kernel, spec=spec,
@@ -830,8 +1118,9 @@ def batch_solver(spec: SweepSpec):
             in_specs=[csp] * (spec.bandwidth + 1),
             out_specs=[csp] * (1 + spec.n_coefs),
             out_shape=[shape] * (1 + spec.n_coefs),
-            scratch_shapes=[pltpu.VMEM((spec.carry_rows, block_m), dtype)],
+            scratch_shapes=[pltpu.VMEM((spec.carry_rows, block_m), cdt)],
             interpret=interpret,
+            **_compiler_params(prefetch, interpret),
         )(*args)
         mid, coefs = outs[0], outs[1:]
 
@@ -843,8 +1132,9 @@ def batch_solver(spec: SweepSpec):
             in_specs=[rsp] * (spec.n_coefs + 1),
             out_specs=rsp,
             out_shape=shape,
-            scratch_shapes=[pltpu.VMEM((spec.order, block_m), dtype)],
+            scratch_shapes=[pltpu.VMEM((spec.order, block_m), cdt)],
             interpret=interpret,
+            **_compiler_params(prefetch, interpret),
         )(*coefs, mid)
     return solver
 

@@ -26,8 +26,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import (PentaFactor, PeriodicPentaFactor,
                         PeriodicTridiagFactor, TridiagFactor)
-from .common import (check_vmem, check_vmem_streamed, default_interpret,
-                     pad_lanes, pad_sweep)
+from .common import (canonical_storage_dtype, check_vmem, check_vmem_fused,
+                     check_vmem_streamed, default_interpret, pad_lanes,
+                     pad_sweep)
 from .engine import (RecurrenceSpec, SweepSpec, batch_solver,
                      find_recurrence_spec, find_spec, recurrence_solver,
                      shared_solver)
@@ -74,35 +75,56 @@ def stack_penta_lhs(f: PentaFactor, uniform: bool = False, *,
 
 
 def _check_spec_vmem(spec: SweepSpec, n: int, block_m: int,
-                     block_n: int | None, dtype) -> None:
-    """Spec-derived working-set check (no hand-kept per-kernel counts)."""
+                     block_n: int | None, dtype,
+                     storage_dtype=None) -> None:
+    """Spec-derived working-set check (no hand-kept per-kernel counts).
+
+    Mixed-precision storage sizes the streamed chunk operands at the
+    storage itemsize and the carries / fused full-N intermediate scratch
+    at the fp32-promoted compute itemsize."""
     n_rhs, n_lhs, n_carry = spec.vmem_counts()
-    if block_n is None:
+    c_item = jnp.promote_types(dtype, jnp.float32).itemsize
+    s_item = (storage_dtype or dtype).itemsize
+    if getattr(spec, "fused", False):
+        check_vmem_fused(n, block_n, block_m, n_rhs, n_lhs, n_carry,
+                         spec.sweep_scratch(), itemsize=s_item,
+                         compute_itemsize=c_item)
+    elif block_n is None:
         check_vmem(n, block_m, n_rhs_blocks=n_rhs, n_lhs_vecs=n_lhs,
-                   itemsize=dtype.itemsize)
+                   itemsize=c_item)
     else:
         check_vmem_streamed(block_n, block_m, n_rhs, n_lhs, n_carry,
-                            itemsize=dtype.itemsize)
+                            itemsize=c_item)
 
 
 def thomas_constant(f: TridiagFactor, d: jax.Array, *, block_m: int = 128,
                     block_n: int | None = None, unroll: int = 1,
                     interpret: bool | None = None,
-                    transposed: bool = False) -> jax.Array:
+                    transposed: bool = False, fused: bool = False,
+                    storage_dtype=None,
+                    prefetch: bool = False) -> jax.Array:
     """Constant-LHS batched Thomas solve (cuThomasConstantBatch). d: (N, M).
 
     ``block_n=None`` runs the VMEM-resident kernel (full N per grid step);
     an integer ``block_n`` runs the HBM-streamed split-N kernel pair,
-    which lifts the VMEM wall for large N.  ``transposed=True`` solves
+    which lifts the VMEM wall for large N — or, with ``fused=True``, the
+    single-call ascend/descend kernel that keeps the intermediate in VMEM
+    (half the streamed HBM traffic).  ``storage_dtype="bf16"`` stores the
+    factor and RHS streams at bf16 in HBM (fp32 accumulation in-kernel;
+    the solve returns fp32).  ``prefetch=True`` double-buffers the chunk
+    DMA on hardware (no-op under interpret).  ``transposed=True`` solves
     A^T x = d from the SAME stored factor (the adjoint sweeps)."""
     if interpret is None:
         interpret = default_interpret()
     n = d.shape[0]
+    sdt = canonical_storage_dtype(storage_dtype)
     spec = find_spec(3, "constant", streamed=block_n is not None,
-                     transposed=transposed)
-    _check_spec_vmem(spec, n, block_m, block_n, d.dtype)
+                     transposed=transposed, fused=fused)
+    _check_spec_vmem(spec, n, block_m, block_n, d.dtype, sdt)
     lhs = stack_tridiag_lhs(f, transposed=transposed)
     d_pad, m = pad_lanes(d, block_m)
+    if sdt is not None:
+        lhs, d_pad = lhs.astype(sdt), d_pad.astype(sdt)
     if block_n is None:
         x = shared_solver(spec)(lhs, d_pad, block_m=block_m, unroll=unroll,
                                 interpret=interpret)
@@ -110,13 +132,15 @@ def thomas_constant(f: TridiagFactor, d: jax.Array, *, block_m: int = 128,
     lhs, _ = pad_sweep(lhs, block_n, axis=1)
     d_pad, _ = pad_sweep(d_pad, block_n, axis=0)
     x = shared_solver(spec)(lhs, d_pad, block_m=block_m, block_n=block_n,
-                            unroll=unroll, interpret=interpret)
+                            unroll=unroll, interpret=interpret,
+                            prefetch=prefetch)
     return x[:n, :m]
 
 
 def thomas_batch(a, b, c, d, *, block_m: int = 128,
                  block_n: int | None = None, unroll: int = 1,
-                 interpret: bool | None = None) -> jax.Array:
+                 interpret: bool | None = None, fused: bool = False,
+                 storage_dtype=None, prefetch: bool = False) -> jax.Array:
     """Per-system-LHS baseline (cuThomasBatch). a/b/c/d: (N, M).
 
     Dead padded lanes get an IDENTITY main diagonal (b = 1), not the zero
@@ -125,15 +149,22 @@ def thomas_batch(a, b, c, d, *, block_m: int = 128,
     ``JAX_DEBUG_NANS`` runs and waste the flush-to-zero path).  An integer
     ``block_n`` selects the HBM-streamed split-N pair, which additionally
     identity-pads the main diagonal along the sweep axis for the same
-    reason and spills the fused c_hat to HBM between the passes."""
+    reason and spills the fused c_hat to HBM between the passes —
+    ``fused=True`` keeps the spill in full-N VMEM scratch instead (one
+    ascend/descend kernel).  ``storage_dtype="bf16"`` streams the
+    diagonals/RHS at bf16 (fp32 in-kernel); ``prefetch=True``
+    double-buffers the chunk DMA on hardware."""
     if interpret is None:
         interpret = default_interpret()
     n, m = d.shape
-    spec = find_spec(3, "batch", streamed=block_n is not None)
-    _check_spec_vmem(spec, n, block_m, block_n, d.dtype)
+    sdt = canonical_storage_dtype(storage_dtype)
+    spec = find_spec(3, "batch", streamed=block_n is not None, fused=fused)
+    _check_spec_vmem(spec, n, block_m, block_n, d.dtype, sdt)
     idents = (False, True, False, False)          # b is the main diagonal
     args = [pad_lanes(x, block_m, identity=ident)[0]
             for x, ident in zip((a, b, c, d), idents)]
+    if sdt is not None:
+        args = [x.astype(sdt) for x in args]
     if block_n is None:
         x = batch_solver(spec)(*args, block_m=block_m, unroll=unroll,
                                interpret=interpret)
@@ -141,7 +172,8 @@ def thomas_batch(a, b, c, d, *, block_m: int = 128,
     args = [pad_sweep(x, block_n, axis=0, identity=ident)[0]
             for x, ident in zip(args, idents)]
     x = batch_solver(spec)(*args, block_m=block_m, block_n=block_n,
-                           unroll=unroll, interpret=interpret)
+                           unroll=unroll, interpret=interpret,
+                           prefetch=prefetch)
     return x[:n, :m]
 
 
@@ -159,20 +191,28 @@ def _uniform_eps_param(f: PentaFactor, dtype) -> jax.Array:
 def penta_constant(f: PentaFactor, rhs: jax.Array, *, block_m: int = 128,
                    block_n: int | None = None, unroll: int = 1,
                    interpret: bool | None = None, uniform: bool = False,
-                   transposed: bool = False) -> jax.Array:
+                   transposed: bool = False, fused: bool = False,
+                   storage_dtype=None, prefetch: bool = False) -> jax.Array:
     """Constant-LHS batched penta solve (cuPentConstantBatch /
     cuPentUniformBatch when ``uniform``).  ``block_n`` selects the
-    HBM-streamed split-N kernel pair; ``transposed=True`` solves
-    A^T x = rhs from the SAME stored factor."""
+    HBM-streamed split-N kernel pair (``fused=True``: the single-call
+    ascend/descend kernel — half the streamed traffic);
+    ``storage_dtype="bf16"`` streams the factor/RHS at bf16 (fp32
+    in-kernel); ``transposed=True`` solves A^T x = rhs from the SAME
+    stored factor."""
     if interpret is None:
         interpret = default_interpret()
     n = rhs.shape[0]
+    sdt = canonical_storage_dtype(storage_dtype)
     spec = find_spec(5, "uniform" if uniform else "constant",
-                     streamed=block_n is not None, transposed=transposed)
-    _check_spec_vmem(spec, n, block_m, block_n, rhs.dtype)
-    eps = _uniform_eps_param(f, rhs.dtype) if uniform else None
+                     streamed=block_n is not None, transposed=transposed,
+                     fused=fused)
+    _check_spec_vmem(spec, n, block_m, block_n, rhs.dtype, sdt)
+    eps = _uniform_eps_param(f, sdt or rhs.dtype) if uniform else None
     lhs = stack_penta_lhs(f, uniform=uniform, transposed=transposed)
     rhs_pad, m = pad_lanes(rhs, block_m)
+    if sdt is not None:
+        lhs, rhs_pad = lhs.astype(sdt), rhs_pad.astype(sdt)
     if block_n is None:
         x = shared_solver(spec)(lhs, rhs_pad, block_m=block_m,
                                 unroll=unroll, interpret=interpret, eps=eps)
@@ -180,25 +220,33 @@ def penta_constant(f: PentaFactor, rhs: jax.Array, *, block_m: int = 128,
     lhs, _ = pad_sweep(lhs, block_n, axis=1)
     rhs_pad, _ = pad_sweep(rhs_pad, block_n, axis=0)
     x = shared_solver(spec)(lhs, rhs_pad, block_m=block_m, block_n=block_n,
-                            unroll=unroll, interpret=interpret, eps=eps)
+                            unroll=unroll, interpret=interpret, eps=eps,
+                            prefetch=prefetch)
     return x[:n, :m]
 
 
 def penta_batch(a, b, c, d, e, rhs, *, block_m: int = 128,
                 block_n: int | None = None, unroll: int = 1,
-                interpret: bool | None = None) -> jax.Array:
+                interpret: bool | None = None, fused: bool = False,
+                storage_dtype=None, prefetch: bool = False) -> jax.Array:
     """Per-system-LHS baseline (cuPentBatch).  Identity-pads the MAIN
     diagonal c on the lane axis (and on the sweep axis when streamed):
     dead lanes/rows must factor as identity, not divide by the zero pad.
-    ``block_n`` selects the streamed pair (gamma/delta spill to HBM)."""
+    ``block_n`` selects the streamed pair (gamma/delta spill to HBM);
+    ``fused=True`` keeps the spill in full-N VMEM scratch instead (one
+    ascend/descend kernel); ``storage_dtype="bf16"`` streams the
+    diagonals/RHS at bf16 (fp32 in-kernel)."""
     if interpret is None:
         interpret = default_interpret()
     n, m = rhs.shape
-    spec = find_spec(5, "batch", streamed=block_n is not None)
-    _check_spec_vmem(spec, n, block_m, block_n, rhs.dtype)
+    sdt = canonical_storage_dtype(storage_dtype)
+    spec = find_spec(5, "batch", streamed=block_n is not None, fused=fused)
+    _check_spec_vmem(spec, n, block_m, block_n, rhs.dtype, sdt)
     idents = (False, False, True, False, False, False)  # c is the main diag
     args = [pad_lanes(x, block_m, identity=ident)[0]
             for x, ident in zip((a, b, c, d, e, rhs), idents)]
+    if sdt is not None:
+        args = [x.astype(sdt) for x in args]
     if block_n is None:
         x = batch_solver(spec)(*args, block_m=block_m, unroll=unroll,
                                interpret=interpret)
@@ -206,7 +254,8 @@ def penta_batch(a, b, c, d, e, rhs, *, block_m: int = 128,
     args = [pad_sweep(x, block_n, axis=0, identity=ident)[0]
             for x, ident in zip(args, idents)]
     x = batch_solver(spec)(*args, block_m=block_m, block_n=block_n,
-                           unroll=unroll, interpret=interpret)
+                           unroll=unroll, interpret=interpret,
+                           prefetch=prefetch)
     return x[:n, :m]
 
 
@@ -353,9 +402,13 @@ def entry_point(spec):
 
 def solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int, m: int, *,
                              dtype=jnp.float32, streamed: bool = False,
-                             transposed: bool = False) -> int:
+                             transposed: bool = False, fused: bool = False,
+                             storage_dtype=None) -> int:
     """Bytes moved HBM<->VMEM by one batched solve of an (n, m) RHS.
 
+    ``fused`` selects the single-call streamed variant's (halved) model;
+    ``storage_dtype`` prices the stored-operand streams at that itemsize
+    (the bf16 storage path) while intermediates stay at ``dtype``.
     Unknown (bandwidth, mode, streamed, transposed) combinations raise an
     informative ``ValueError`` (via ``find_spec``) naming the valid
     choices."""
@@ -364,8 +417,9 @@ def solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int, m: int, *,
         # runs the FORWARD batch kernels — identical streams.
         transposed = False
     spec = find_spec(bandwidth, mode, streamed=streamed,
-                     transposed=transposed)
-    return spec.traffic_bytes(n, m, dtype)
+                     transposed=transposed, fused=fused)
+    return spec.traffic_bytes(n, m, dtype,
+                              canonical_storage_dtype(storage_dtype))
 
 
 def recurrence_hbm_traffic_bytes(order: int, n: int, m: int, *,
@@ -381,7 +435,9 @@ def recurrence_hbm_traffic_bytes(order: int, n: int, m: int, *,
 def sharded_solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int,
                                      m: int, n_shards: int, *,
                                      dtype=jnp.float32, streamed: bool = False,
-                                     transposed: bool = False) -> int:
+                                     transposed: bool = False,
+                                     fused: bool = False,
+                                     storage_dtype=None) -> int:
     """PER-DEVICE bytes when the ``sharded`` backend runs this module's
     kernels on each device's local slice of the interleaved batch
     (``repro.solver.sharded`` with engine kernels active).  The solve has
@@ -392,7 +448,8 @@ def sharded_solver_hbm_traffic_bytes(bandwidth: int, mode: str, n: int,
     from .common import shard_lanes
     return solver_hbm_traffic_bytes(bandwidth, mode, n,
                                     shard_lanes(m, n_shards), dtype=dtype,
-                                    streamed=streamed, transposed=transposed)
+                                    streamed=streamed, transposed=transposed,
+                                    fused=fused, storage_dtype=storage_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -40,7 +40,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.kernels.common import pad_lanes, shard_lanes
+from repro.kernels.common import (canonical_storage_dtype, pad_lanes,
+                                  shard_lanes)
 
 from .reference import (build_stored, solve_stored, transpose_solve_stored)
 from .registry import register_backend, register_pure_backend
@@ -86,14 +87,16 @@ def local_system(system: BandedSystem, n_shards: int) -> BandedSystem:
 
 def local_tune(system: BandedSystem, n_shards: int, *,
                block_m: int | None = None,
-               block_n: int | None = None) -> tuple | None:
+               block_n: int | None = None,
+               prefetch: bool = False) -> tuple | None:
     """Per-device ``(block_m, block_n)`` — the single-device 2-D auto-tune
     (``pallas.auto_tune``) run on the LOCAL system view.  ``None`` when no
     kernel configuration fits, or no kernel family serves the mode at all
     (the caller falls back to reference sweeps per shard)."""
     from . import pallas as _pallas
     return _pallas.auto_tune(local_system(system, n_shards),
-                             block_m=block_m, block_n=block_n)
+                             block_m=block_m, block_n=block_n,
+                             prefetch=prefetch)
 
 
 def sharded_solve_stored(bandwidth: int, mode: str, periodic: bool, n: int,
@@ -104,6 +107,8 @@ def sharded_solve_stored(bandwidth: int, mode: str, periodic: bool, n: int,
                          block_m: int | None = None,
                          block_n: int | None = None,
                          interpret: bool | None = None,
+                         fused: bool = False, storage_dtype=None,
+                         prefetch: bool = False,
                          transposed: bool = False) -> jax.Array:
     """Pure shard_map dispatch given (static meta, stored pytree, rhs).
 
@@ -123,6 +128,7 @@ def sharded_solve_stored(bandwidth: int, mode: str, periodic: bool, n: int,
             return _pallas.tuned_solve_stored(
                 bandwidth, mode, periodic, st, r, block_m=block_m,
                 block_n=block_n, unroll=unroll, interpret=interpret,
+                fused=fused, storage_dtype=storage_dtype, prefetch=prefetch,
                 transposed=transposed)
     else:
         ref_fn = transpose_solve_stored if transposed else solve_stored
@@ -164,10 +170,12 @@ def _pure_build(system: BandedSystem, *, mesh: Mesh | None = None,
                 batch_axis=None, method: str = "scan", unroll: int = 1,
                 kernels: str = "auto", block_m: int | None = None,
                 block_n: int | None = None, interpret: bool | None = None,
-                **_ignored):
+                fused: bool | None = None, storage_dtype=None,
+                prefetch: bool = True, **_ignored):
     if kernels not in KERNEL_POLICIES:
         raise ValueError(f"kernels must be one of {KERNEL_POLICIES}, "
                          f"got {kernels!r}")
+    sdt = canonical_storage_dtype(storage_dtype)
     mesh, batch_axis, n_shards = resolve_mesh(mesh, batch_axis)
     opts = {"mesh": mesh, "batch_axis": batch_axis, "n_shards": n_shards,
             "method": method, "unroll": unroll}
@@ -175,7 +183,7 @@ def _pure_build(system: BandedSystem, *, mesh: Mesh | None = None,
     tuned = None
     if kernels != "reference":
         tuned = local_tune(system, n_shards, block_m=block_m,
-                           block_n=block_n)
+                           block_n=block_n, prefetch=prefetch)
         if tuned is None and kernels == "pallas":
             from . import pallas as _pallas
             _, why = _pallas.supports(local_system(system, n_shards),
@@ -190,8 +198,15 @@ def _pure_build(system: BandedSystem, *, mesh: Mesh | None = None,
     if tuned is not None:
         from . import pallas as _pallas
         bm, bn = tuned
+        # per-device fused resolution: same traffic-model argmin as the
+        # single-device tuner, sized against the LOCAL system view
+        fused = _pallas.resolve_fused(local_system(system, n_shards), bm, bn,
+                                      fused=fused, prefetch=prefetch,
+                                      storage_dtype=sdt)
         opts.update(kernels="pallas", shard_build="pallas", block_m=bm,
-                    block_n=bn, interpret=interpret)
+                    block_n=bn, interpret=interpret, fused=fused,
+                    storage_dtype=None if sdt is None else sdt.name,
+                    prefetch=prefetch)
         return _pallas.build_stored(system), opts
 
     opts.update(kernels="reference", shard_build="reference")
@@ -217,7 +232,9 @@ def _dispatch(meta, stored, rhs, *, transposed: bool):
         method=meta.opt("method", "scan"), unroll=meta.opt("unroll", 1),
         kernels=meta.opt("kernels", "reference"),
         block_m=meta.opt("block_m"), block_n=meta.opt("block_n"),
-        interpret=meta.opt("interpret"), transposed=transposed)
+        interpret=meta.opt("interpret"), fused=meta.opt("fused", False),
+        storage_dtype=meta.opt("storage_dtype"),
+        prefetch=meta.opt("prefetch", False), transposed=transposed)
 
 
 def _pure_solve(meta, stored, rhs):
@@ -250,14 +267,16 @@ class ShardedBackend:
                  batch_axis: str | tuple | None = None, method: str = "scan",
                  unroll: int = 1, kernels: str = "auto",
                  block_m: int | None = None, block_n: int | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, fused: bool | None = None,
+                 storage_dtype=None, prefetch: bool = True):
         from .functional import factorize
         self.system = system
         self.fact = factorize(system, backend="sharded", mesh=mesh,
                               batch_axis=batch_axis, method=method,
                               unroll=unroll, kernels=kernels,
                               block_m=block_m, block_n=block_n,
-                              interpret=interpret)
+                              interpret=interpret, fused=fused,
+                              storage_dtype=storage_dtype, prefetch=prefetch)
         self.stored = self.fact.stored
         self.mesh = self.fact.meta.opt("mesh")
         self.batch_axis = self.fact.meta.opt("batch_axis")

@@ -103,18 +103,20 @@ def _run_spec(spec, rhs):
         diags = _batch_diags(rng, spec.bandwidth)
         fn = kops.thomas_batch if spec.bandwidth == 3 else kops.penta_batch
         got = fn(*diags, rhs, block_m=BLOCK_M, block_n=block_n,
-                 interpret=True)
+                 fused=getattr(spec, "fused", False), interpret=True)
         oracle = (thomas_factor_solve if spec.bandwidth == 3
                   else penta_factor_solve)
         return got, oracle(*diags, rhs)
     if spec.bandwidth == 3:
         f = _tridiag_factor(rng)
         got = kops.thomas_constant(f, rhs, block_m=BLOCK_M, block_n=block_n,
+                                   fused=getattr(spec, "fused", False),
                                    interpret=True, transposed=spec.transposed)
         want = (thomas_solve_t if spec.transposed else thomas_solve)(f, rhs)
         return got, want
     f = penta_factor(*map(jnp.asarray, _penta_coeffs(rng, spec.uniform)))
     got = kops.penta_constant(f, rhs, block_m=BLOCK_M, block_n=block_n,
+                              fused=getattr(spec, "fused", False),
                               interpret=True, uniform=spec.uniform,
                               transposed=spec.transposed)
     want = (penta_solve_t if spec.transposed else penta_solve)(f, rhs)
@@ -126,11 +128,11 @@ def _run_spec(spec, rhs):
 # ---------------------------------------------------------------------------
 
 def test_registry_covers_the_variant_matrix():
-    """2 bandwidths x (shared: fwd/transposed x resident/streamed
-    [x uniform for penta]) + (batch: resident/streamed) = 16 sweep specs,
-    plus the gated recurrence family (2 orders x fwd/rev x
-    resident/streamed) = 24 specs total."""
-    assert len(REGISTRY) == 24
+    """2 bandwidths x (shared: fwd/transposed x resident/streamed/fused
+    [x uniform for penta]) + (batch: resident/streamed/fused) = 24 sweep
+    specs, plus the gated recurrence family (2 orders x fwd/rev x
+    resident/streamed) = 32 specs total."""
+    assert len(REGISTRY) == 32
     for order in (1, 2):
         for reverse in (False, True):
             for streamed in (False, True):
@@ -138,15 +140,18 @@ def test_registry_covers_the_variant_matrix():
                                       streamed=streamed).name in REGISTRY
     for bw in (3, 5):
         for transposed in (False, True):
-            for streamed in (False, True):
+            for streamed, fused in ((False, False), (True, False),
+                                    (True, True)):
                 assert SweepSpec(bw, "shared", transposed=transposed,
-                                 streamed=streamed).name in REGISTRY
+                                 streamed=streamed,
+                                 fused=fused).name in REGISTRY
                 if bw == 5:
                     assert SweepSpec(bw, "shared", transposed=transposed,
-                                     streamed=streamed,
+                                     streamed=streamed, fused=fused,
                                      uniform=True).name in REGISTRY
-        for streamed in (False, True):
-            assert SweepSpec(bw, "batch", streamed=streamed).name in REGISTRY
+        for streamed, fused in ((False, False), (True, False), (True, True)):
+            assert SweepSpec(bw, "batch", streamed=streamed,
+                             fused=fused).name in REGISTRY
 
 
 def test_no_transposed_batch_spec():
@@ -184,7 +189,7 @@ def test_spec_parity_matrix(name):
 def test_streamed_specs_bit_exact_vs_resident(name):
     """Chunking changes where the carries live, not the arithmetic."""
     spec = REGISTRY[name]
-    resident = REGISTRY[name.replace("_streamed", "")]
+    resident = REGISTRY[spec.resident_name]
     rng = np.random.default_rng(11)
     rhs = jnp.asarray(rng.normal(size=(N, M)).astype(np.float32))
     got, _ = _run_spec(spec, rhs)
@@ -216,6 +221,7 @@ def test_every_registered_spec_has_a_traffic_entry():
         # the dispatcher resolves the same spec to the same number
         assert kops.solver_hbm_traffic_bytes(
             spec.bandwidth, spec.mode, n, m, streamed=spec.streamed,
+            fused=getattr(spec, "fused", False),
             transposed=spec.transposed) == spec.traffic_bytes(n, m)
     # batch entries resolve through the mode path (incl. the rolled adjoint)
     for bw in (3, 5):

@@ -11,7 +11,12 @@ two by row NAME:
     reference path), not jitter;
   * rows only in the fresh file are fine (new benchmarks land freely);
   * rows only in the baseline fail — a silently DROPPED benchmark is the
-    easiest way for a perf regression to hide.
+    easiest way for a perf regression to hide;
+  * a row carrying ``model_bytes`` (the expected HBM traffic recorded at
+    bench time) is re-derived from its ``traffic`` key through the LIVE
+    kernel spec registry — a mismatch fails the gate, so the roofline
+    model in the repo can never drift from the numbers the perf story
+    quotes.
 
     PYTHONPATH=src python -m benchmarks.run --json
     python tools/bench_regress.py BENCH_solvers.json --baseline <committed>
@@ -27,6 +32,8 @@ import json
 import sys
 from pathlib import Path
 
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
 
 def load_rows(path: Path) -> dict:
     rows = json.loads(path.read_text())
@@ -37,8 +44,45 @@ def load_rows(path: Path) -> dict:
             raise SystemExit(f"error: malformed row in {path}: {row!r}")
         if name in out:
             raise SystemExit(f"error: duplicate row name {name!r} in {path}")
-        out[name] = float(us)
+        out[name] = row
     return out
+
+
+def expected_model_bytes(row: dict) -> int:
+    """Re-derive a row's expected traffic from its recorded key, through
+    the same registry resolvers the solver uses (NOT the stored number)."""
+    from repro.kernels import ops as kops
+    key = dict(row["traffic"])
+    n, m = row["n"], row["m"]
+    if "order" in key:
+        return kops.recurrence_hbm_traffic_bytes(key.pop("order"), n, m,
+                                                 **key)
+    return kops.solver_hbm_traffic_bytes(key.pop("bandwidth"),
+                                         key.pop("mode"), n, m, **key)
+
+
+def check_model_bytes(fresh: dict) -> list:
+    """DRIFT failures: recorded model_bytes vs the live spec derivation."""
+    failures = []
+    for name in sorted(fresh):
+        row = fresh[name]
+        if "model_bytes" not in row:
+            continue
+        if "traffic" not in row or row.get("n") is None:
+            failures.append(f"DRIFT    {name}: model_bytes without a "
+                            f"traffic key — the row cannot be re-derived")
+            continue
+        try:
+            want = expected_model_bytes(row)
+        except Exception as exc:  # registry rejected the key
+            failures.append(f"DRIFT    {name}: traffic key no longer "
+                            f"resolves ({type(exc).__name__}: {exc})")
+            continue
+        if row["model_bytes"] != want:
+            failures.append(f"DRIFT    {name}: recorded model_bytes "
+                            f"{row['model_bytes']} but the live spec "
+                            f"derivation says {want}")
+    return failures
 
 
 def compare(fresh: dict, baseline: dict, threshold: float) -> list:
@@ -50,7 +94,8 @@ def compare(fresh: dict, baseline: dict, threshold: float) -> list:
                             f"fresh run — benchmarks may only be removed "
                             f"with the baseline")
             continue
-        was, now = baseline[name], fresh[name]
+        was = float(baseline[name]["us_per_call"])
+        now = float(fresh[name]["us_per_call"])
         if was > 0 and now / was > threshold:
             failures.append(f"SLOWER   {name}: {was:.1f} -> {now:.1f} us "
                             f"({now / was:.2f}x > {threshold:.2f}x)")
@@ -69,13 +114,15 @@ def main() -> int:
     fresh = load_rows(args.fresh)
     baseline = load_rows(args.baseline)
     failures = compare(fresh, baseline, args.threshold)
+    failures += check_model_bytes(fresh)
 
     new = sorted(set(fresh) - set(baseline))
     matched = len(set(fresh) & set(baseline))
+    modeled = sum(1 for r in fresh.values() if "model_bytes" in r)
     print(f"bench_regress: {matched} matched row(s), {len(new)} new, "
-          f"threshold {args.threshold:.2f}x")
+          f"{modeled} traffic-modeled, threshold {args.threshold:.2f}x")
     for name in new:
-        print(f"  NEW      {name}: {fresh[name]:.1f} us")
+        print(f"  NEW      {name}: {fresh[name]['us_per_call']:.1f} us")
     for line in failures:
         print(f"  {line}")
     if failures:
